@@ -1,0 +1,42 @@
+"""LM cascade serving (the paper's technique on LM workloads): lockstep
+(paper-faithful) vs compacted escalation (beyond-paper) — accuracy-identical
+within capacity, boundary-bytes and cloud-compute differ."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.cascade.ecc_infer import CascadeLM, edge_variant
+from repro.configs import get_config
+from repro.models.model import LM
+from repro.serving import CascadeEngine
+
+
+def run() -> List[tuple]:
+    rows = []
+    cloud_cfg = get_config("smollm-135m").reduced()
+    edge_cfg = edge_variant(cloud_cfg, layers=1)
+    cloud, edge = LM(cloud_cfg, kv_chunk=32), LM(edge_cfg, kv_chunk=32)
+    cp, _ = cloud.init(jax.random.PRNGKey(0))
+    ep, _ = edge.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cloud_cfg.vocab_size, size=(16, 32))
+
+    for mode, compact in (("lockstep", False), ("compact", True)):
+        cascade = CascadeLM(edge, cloud, capacity_frac=0.5)
+        eng = CascadeEngine(cascade, ep, cp, compact=compact)
+        eng.query(tokens)                         # compile
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            eng.query(tokens)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        m = eng.metrics
+        rows.append((f"cascade/{mode}/b16s32", us,
+                     f"wan_bytes_per_query={m.wan_bytes / m.queries:.0f};"
+                     f"escalated_frac={m.escalated / m.queries:.2f};"
+                     f"agreement={m.agreement:.2f}"))
+    return rows

@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks: wall-clock of the jnp oracle paths on this host
+(the Pallas kernels target TPU; interpret-mode timing is not meaningful), plus
+derived arithmetic intensity so the TPU projection is visible."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[tuple]:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+
+    b, s, h, kv, hd = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_streaming_ref(q, k, v))
+    us = _time(fa, q, k, v)
+    flops = 4 * b * s * s * h * hd
+    rows.append((f"kernel/flash_attention/b{b}s{s}h{h}", us,
+                 f"gflops_s={flops/us/1e3:.1f}"))
+
+    bb, ss, w = 2, 2048, 512
+    a = jax.random.uniform(ks[0], (bb, ss, w), jnp.float32, 0.9, 0.999)
+    x = jax.random.normal(ks[1], (bb, ss, w), jnp.float32)
+    h0 = jnp.zeros((bb, w))
+    sc = jax.jit(lambda a, x, h0: ref.rglru_scan_ref(a, x, h0))
+    us = _time(sc, a, x, h0)
+    gbytes = 3 * bb * ss * w * 4 / 1e9
+    rows.append((f"kernel/rglru_scan/b{bb}s{ss}w{w}", us,
+                 f"gb_s={gbytes/(us/1e6):.1f}"))
+
+    from repro.cascade.gate import make_thresholds
+    t, vcb = 4096, 32768
+    logits = jax.random.normal(ks[2], (t, vcb), jnp.float32)
+    th = make_thresholds()
+    g = jax.jit(lambda l: ref.cascade_gate_ref(l, th)["conf"])
+    us = _time(g, logits)
+    gbytes = t * vcb * 4 / 1e9
+    rows.append((f"kernel/cascade_gate/t{t}v{vcb}", us,
+                 f"gb_s={gbytes/(us/1e6):.1f}"))
+    return rows

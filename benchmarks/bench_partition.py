@@ -1,0 +1,30 @@
+"""Intra-model partitioning (ECC inference, Neurosurgeon-style): best split
+point per network condition — the in-app control decision of Principle Four."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import get_config
+from repro.core.patterns.inference import best_partition
+
+SCENARIOS = [
+    # (name, edge FLOP/s, cloud FLOP/s, uplink Mbps, delay s)
+    ("lan", 5e10, 5e12, 1000.0, 0.001),
+    ("campus", 5e10, 5e12, 20.0, 0.05),
+    ("cellular", 5e10, 5e12, 2.0, 0.10),
+    ("edge-strong", 5e11, 5e12, 2.0, 0.10),
+]
+
+
+def run() -> List[tuple]:
+    rows = []
+    for arch in ("smollm-135m", "internvl2-2b"):
+        cfg = get_config(arch)
+        total = sum(s.repeat for s in cfg.stages)
+        for name, ef, cf, up, delay in SCENARIOS:
+            k, t = best_partition(cfg, batch=1, seq_len=256,
+                                  edge_flops_s=ef, cloud_flops_s=cf,
+                                  uplink_mbps=up, delay_s=delay)
+            rows.append((f"partition/{arch}/{name}", t * 1e6,
+                         f"split={k}/{total}"))
+    return rows

@@ -1,0 +1,29 @@
+"""Roofline terms per (arch x shape) from the dry-run artifacts
+(deliverable g). Emits one row per single-pod baseline."""
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.analysis.roofline import roofline_table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def run() -> List[tuple]:
+    rows = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return [("roofline/SKIPPED", 0.0, "run repro.launch.dryrun first")]
+    for r in roofline_table(DRYRUN_DIR, mesh="pod16x16"):
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        dom_t = {"compute": r["t_compute_s"], "memory": r["t_memory_s"],
+                 "collective": r["t_collective_s"]}[r["dominant"]]
+        derived = (f"dominant={r['dominant']};"
+                   f"tc_ms={r['t_compute_s']*1e3:.2f};"
+                   f"tm_ms={r['t_memory_s']*1e3:.2f};"
+                   f"tx_ms={r['t_collective_s']*1e3:.2f};"
+                   f"useful={r['useful_ratio']:.2f};"
+                   f"hbm_gib={(r['hbm_gib_per_device'] or 0):.1f}")
+        rows.append((name, dom_t * 1e6, derived))
+    return rows

@@ -1,0 +1,54 @@
+"""Paper Fig. 5 — intelligent video query: F1 / BWC / EIL for CI, EI, ACE,
+ACE+ across system load (frame interval) x WAN delay. One row per cell."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.configs.ace_video_query import config
+from repro.core.video_query import run_video_query
+
+INTERVALS = (0.5, 0.2, 0.1)
+DELAYS = (0.0, 50.0)
+PARADIGMS = ("ci", "ei", "ace", "ace+")
+
+
+def run(duration_s: float = 20.0) -> List[tuple]:
+    cfg = config()
+    rows = []
+    for delay in DELAYS:
+        for iv in INTERVALS:
+            for p in PARADIGMS:
+                t0 = time.perf_counter()
+                r = run_video_query(cfg, paradigm=p, frame_interval_s=iv,
+                                    wan_delay_ms=delay, duration_s=duration_s)
+                wall_us = (time.perf_counter() - t0) * 1e6
+                name = f"fig5/{p}/iv{iv}/d{int(delay)}ms"
+                derived = (f"f1={r['f1']:.3f};bwc_mb={r['bwc_mb']:.2f};"
+                           f"eil_s={r['eil_s']:.3f};crops={r['crops']}")
+                rows.append((name, wall_us, derived))
+    return rows
+
+
+def check(rows: List[tuple]) -> List[str]:
+    """Assert the paper's qualitative claims hold; return violations."""
+    vals = {}
+    for name, _, derived in rows:
+        d = dict(kv.split("=") for kv in derived.split(";"))
+        vals[name] = {k: float(v) for k, v in d.items()}
+    bad = []
+    for delay in DELAYS:
+        d = int(delay)
+        for iv in INTERVALS:
+            ci = vals[f"fig5/ci/iv{iv}/d{d}ms"]
+            ei = vals[f"fig5/ei/iv{iv}/d{d}ms"]
+            ace = vals[f"fig5/ace/iv{iv}/d{d}ms"]
+            acep = vals[f"fig5/ace+/iv{iv}/d{d}ms"]
+            if not (ci["f1"] > ace["f1"] > ei["f1"]):
+                bad.append(f"F1 ordering violated at iv={iv} d={d}")
+            if not (ace["bwc_mb"] < 0.5 * ci["bwc_mb"]):
+                bad.append(f"ACE bandwidth not << CI at iv={iv} d={d}")
+        hi, lo = vals[f"fig5/ci/iv0.1/d{d}ms"], vals[f"fig5/ci/iv0.5/d{d}ms"]
+        if not (hi["eil_s"] > 5 * lo["eil_s"]):
+            bad.append(f"CI EIL blowup missing at d={d}")
+    return bad

@@ -1,0 +1,64 @@
+"""Benchmark harness (deliverable d) — one module per paper table/figure:
+
+  bench_video_query  paper Fig. 5 (F1/BWC/EIL x load x delay x paradigm)
+  bench_roofline     §Roofline terms per (arch x shape) from the dry-run
+  bench_cascade      LM cascade: lockstep (paper) vs compacted (beyond)
+  bench_partition    intra-model split-point policy (Principle Four)
+  bench_kernels      kernel micro-benchmarks (host oracle timing)
+
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter video-query simulations")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_cascade, bench_kernels, bench_partition,
+                            bench_roofline, bench_video_query)
+
+    suites = {
+        "video_query": lambda: bench_video_query.run(
+            duration_s=8.0 if args.quick else 20.0),
+        "roofline": bench_roofline.run,
+        "partition": bench_partition.run,
+        "kernels": bench_kernels.run,
+        "cascade": bench_cascade.run,
+    }
+    print("name,us_per_call,derived")
+    failures = []
+    vq_rows = None
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            rows = fn()
+            if name == "video_query":
+                vq_rows = rows
+            for row in rows:
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if vq_rows is not None:
+        bad = bench_video_query.check(vq_rows)
+        for b in bad:
+            print(f"CLAIM-VIOLATION,{b}", file=sys.stderr)
+        if not bad:
+            print("# all paper Fig.5 qualitative claims hold", file=sys.stderr)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

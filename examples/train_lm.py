@@ -1,0 +1,67 @@
+"""End-to-end training driver (deliverable b): train an LM on the synthetic
+Markov stream with the full substrate — sharded data loading, AdamW +
+warmup-cosine, remat'd scanned stages, checkpointing.
+
+Default is a CPU-sized run (reduced smollm, ~1 minute). The production
+configuration (full smollm-135m ≈ 134M params for a few hundred steps, the
+'~100M model' target) is exactly the same code path:
+
+    PYTHONPATH=src python examples/train_lm.py --arch smollm-135m --full \
+        --steps 300 --batch 32 --seq 512        # on a real TPU slice
+
+    PYTHONPATH=src python examples/train_lm.py              # CPU demo
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.loader import ShardedLoader
+from repro.data.synthetic import TokenStream
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import LM
+from repro.optim import linear_warmup_cosine
+from repro.training import Trainer
+from repro.utils.tree import tree_size
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--full", action="store_true",
+                    help="train the full config (not the reduced variant)")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    lm = LM(cfg, kv_chunk=min(512, args.seq))
+    print(f"arch={cfg.name}  params~{tree_size(lm.abstract()[0])/1e6:.1f}M")
+
+    mesh = make_host_mesh()
+    stream = TokenStream(cfg.vocab_size, seed=0)
+    loader = ShardedLoader(stream.batches(args.batch, args.seq), mesh=mesh)
+
+    trainer = Trainer(lm, linear_warmup_cosine(args.lr, 10, args.steps),
+                      ckpt_dir=args.ckpt_dir, log_every=5,
+                      ckpt_every=50 if args.ckpt_dir else 0)
+    params, opt = trainer.restore_or_init(jax.random.PRNGKey(0)) \
+        if args.ckpt_dir else trainer.init_state(jax.random.PRNGKey(0))
+    params, opt = trainer.fit(params, opt, iter(loader), args.steps)
+
+    losses = [h["loss"] for h in trainer.history]
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'FELL' if losses[-1] < losses[0] else 'DID NOT FALL'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.analysis.roofline import roofline_from_record, roofline_table
+
+__all__ = ["roofline_from_record", "roofline_table"]

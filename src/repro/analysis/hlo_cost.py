@@ -1,0 +1,236 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so for
+scan-over-layers models every per-device number is low by ~num_layers
+(verified: a 10-iteration scanned matmul reports 1x the flops). This module
+re-derives per-device costs from the optimized HLO text, weighting each
+computation by its loop trip count:
+
+  * dot flops        2 * prod(result dims) * K   (K from contracting dims)
+  * collective bytes result bytes of all-gather/all-reduce/reduce-scatter/
+                     all-to-all/collective-permute (start/done deduped)
+  * hbm bytes        proxy: result bytes of top-level ops (fusion internals
+                     excluded), counted once written + once read
+
+Trip counts come from the largest integer literal in the while condition
+computation — exact for ``lax.scan``/``fori_loop`` lowerings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 0.125, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-_]+)\s*\((.*)\)\s*->")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                       r"\{?%?([\w\.\-_,% ]+)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dtype, dims in _shape_list(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    transcendental: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    result_bytes: float = 0.0
+    # (callee, weight, kind): weight multiplied in when resolving
+    calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    whiles: List[Tuple[str, str, Optional[int]]] = dataclasses.field(default_factory=list)
+    max_const: int = 0
+    is_fusion: bool = False
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, CompCost], Optional[str]]:
+    comps: Dict[str, CompCost] = {}
+    entry: Optional[str] = None
+    cur: Optional[CompCost] = None
+    cur_name = None
+    symbols: Dict[str, List[int]] = {}        # %name -> dims (module-wide)
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not raw.startswith(" "):           # computation header / close
+            m = _COMP_HDR.match(line.lstrip())
+            if m and "{" in line:
+                cur_name = m.group(1)
+                cur = comps.setdefault(cur_name, CompCost())
+                cur.is_fusion = cur_name.startswith(("fused_", "wide."))
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur_name
+                # header params: "name: f32[..]" pairs
+                for pname, ptype in re.findall(r"([\w\.\-_]+):\s*(\S+)",
+                                               m.group(2)):
+                    shapes = _shape_list(ptype)
+                    if len(shapes) == 1:
+                        symbols[pname] = shapes[0][1]
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is None:
+            continue
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        # constants (trip-count candidates)
+        for c in _CONST_RE.findall(stripped):
+            cur.max_const = max(cur.max_const, int(c))
+        lhs, _, rhs = stripped.partition(" = ")
+        # opcode = first token after result type(s)
+        m_op = re.search(
+            r"\)?\s([a-z][a-z0-9\-]*)\(", rhs)
+        opcode = m_op.group(1) if m_op else ""
+        result_clause = rhs[:m_op.start()] if m_op else rhs
+        shapes = _shape_list(result_clause)
+        if len(shapes) == 1:
+            symbols[lhs.strip().lstrip("%")] = shapes[0][1]
+        rb = _shape_bytes(result_clause)
+        if not cur.is_fusion:
+            # fusion-internal intermediates never touch HBM
+            cur.result_bytes += rb
+        if opcode == "dot":
+            cur.dot_flops += _dot_flops(rhs, result_clause, symbols)
+        elif opcode in ("exponential", "tanh", "log", "rsqrt", "power",
+                        "sine", "cosine"):
+            shapes = _shape_list(result_clause)
+            cur.transcendental += sum(
+                float(_prod(d)) for _, d in shapes)
+        else:
+            for kind in _COLLECTIVES:
+                if opcode in (kind, kind + "-start"):
+                    cur.coll_bytes[kind] += rb
+                    cur.coll_counts[kind] += 1
+                    break
+        if opcode == "while":
+            mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rhs)
+            trip = int(mt.group(1)) if mt else None
+            m = re.search(r"condition=%?([\w\.\-_]+), body=%?([\w\.\-_]+)",
+                          rhs)
+            if not m:
+                m = re.search(r"body=%?([\w\.\-_]+), condition=%?([\w\.\-_]+)",
+                              rhs)
+                if m:
+                    cur.whiles.append((m.group(2), m.group(1), trip))
+            else:
+                cur.whiles.append((m.group(1), m.group(2), trip))
+        else:
+            mc = _CALLS_RE.search(rhs)
+            if mc and opcode not in ("while",):
+                for callee in re.split(r"[ ,]+", mc.group(1)):
+                    callee = callee.strip().lstrip("%")
+                    if callee:
+                        cur.calls.append((callee, opcode))
+    return comps, entry
+
+
+def _prod(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _dot_flops(rhs: str, result_clause: str,
+               symbols: Dict[str, List[int]]) -> float:
+    shapes = _shape_list(result_clause)
+    out_elems = sum(_prod(d) for _, d in shapes)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    # lhs operand: inline shape literal, or symbol lookup of operand name
+    after = rhs.split("dot(", 1)[1] if "dot(" in rhs else ""
+    lhs_shapes = _shape_list(after.split(",")[0])
+    if lhs_shapes:
+        lhs_dims = lhs_shapes[0][1]
+    else:
+        opname = after.split(",")[0].split(")")[0].strip().lstrip("%")
+        lhs_dims = symbols.get(opname, [])
+    k = 1
+    if m and lhs_dims:
+        for i in m.group(1).split(","):
+            if i and int(i) < len(lhs_dims):
+                k *= lhs_dims[int(i)]
+    return 2.0 * out_elems * k
+
+
+def analyze(hlo: str) -> dict:
+    """Whole-module per-device costs with loop weighting."""
+    comps, entry = _parse_computations(hlo)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    memo: Dict[str, dict] = {}
+
+    def resolve(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return _zero()
+        c = comps[name]
+        total = {
+            "dot_flops": c.dot_flops,
+            "transcendental": c.transcendental,
+            "result_bytes": c.result_bytes,
+            "coll_bytes": dict(c.coll_bytes),
+            "coll_counts": dict(c.coll_counts),
+        }
+        for callee, kind in c.calls:
+            sub = resolve(callee, stack + (name,))
+            _acc(total, sub, 1.0)
+        for cond, body, known in c.whiles:
+            trip = known if known is not None else max(
+                comps.get(cond, CompCost()).max_const, 1)
+            sub = resolve(body, stack + (name,))
+            _acc(total, sub, float(trip))
+            _acc(total, resolve(cond, stack + (name,)), float(trip))
+        memo[name] = total
+        return total
+
+    out = resolve(entry)
+    out["collective_bytes_total"] = sum(out["coll_bytes"].values())
+    # HBM proxy: write + read of every materialized result
+    out["hbm_bytes"] = 2.0 * out["result_bytes"]
+    return out
+
+
+def _zero() -> dict:
+    return {"dot_flops": 0.0, "transcendental": 0.0, "result_bytes": 0.0,
+            "coll_bytes": {k: 0.0 for k in _COLLECTIVES},
+            "coll_counts": {k: 0.0 for k in _COLLECTIVES}}
+
+
+def _acc(total: dict, sub: dict, w: float) -> None:
+    total["dot_flops"] += w * sub["dot_flops"]
+    total["transcendental"] += w * sub["transcendental"]
+    total["result_bytes"] += w * sub["result_bytes"]
+    for k in _COLLECTIVES:
+        total["coll_bytes"][k] += w * sub["coll_bytes"][k]
+        total["coll_counts"][k] += w * sub["coll_counts"][k]

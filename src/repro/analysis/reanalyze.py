@@ -1,0 +1,35 @@
+"""Re-run the HLO cost model over persisted dry-run HLO (no recompilation).
+
+    PYTHONPATH=src python -m repro.analysis.reanalyze [results/dryrun]
+"""
+import glob
+import gzip
+import json
+import sys
+
+from repro.analysis.hlo_cost import analyze
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    for path in sorted(glob.glob(f"{d}/*.json")):
+        hpath = path.replace(".json", ".hlo.gz")
+        try:
+            with gzip.open(hpath, "rt") as f:
+                hlo = f.read()
+        except FileNotFoundError:
+            print(f"skip (no hlo): {path}")
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        try:
+            rec["weighted"] = analyze(hlo)
+        except Exception as e:  # noqa: BLE001
+            rec["weighted"] = {"error": repr(e)}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"reanalyzed {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Roofline analysis (deliverable g).
+
+For each dry-run record, derive the three roofline terms (TPU v5e):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s           (197 TF bf16)
+    memory     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+    collective = collective_bytes_per_device / link_bw        (~50 GB/s/link)
+
+``cost_analysis()`` on the SPMD module reports *per-device* flops/bytes, and
+the HLO shape inventory (``collectives`` in the record) likewise sums
+per-device result bytes — so all three terms are per-device seconds and the
+chip count in the brief's formulas is already folded in. Collective bytes
+count each op's result once (ring-algorithm factors ~2(n-1)/n are not
+modelled; noted in EXPERIMENTS.md).
+
+Also reported: MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the usefulness
+ratio MODEL_FLOPS / (HLO_FLOPs * devices) which exposes remat/redundant
+compute.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def _param_counts(arch: str) -> Dict[str, float]:
+    """(total, active) parameter counts from the abstract param tree."""
+    import jax
+    from repro.launch.specs import resolved_config
+    from repro.models.model import LM
+    cfg = resolved_config(arch, "train_4k")
+    lm = LM(cfg)
+    params, axes = lm.abstract()
+    total = active = 0.0
+    flat_p = jax.tree.leaves(params)
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    frac = 1.0
+    if cfg.moe is not None:
+        frac = cfg.moe.num_experts_per_tok / cfg.moe.num_experts
+    for leaf, ax in zip(flat_p, flat_a):
+        n = float(np.prod(leaf.shape))
+        total += n
+        active += n * (frac if "expert" in ax else 1.0)
+    return {"total": total, "active": active}
+
+
+_COUNT_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def param_counts(arch: str) -> Dict[str, float]:
+    if arch not in _COUNT_CACHE:
+        _COUNT_CACHE[arch] = _param_counts(arch)
+    return _COUNT_CACHE[arch]
+
+
+def roofline_from_record(rec: dict, counts: Optional[dict] = None) -> dict:
+    w = rec.get("weighted") or {}
+    if "dot_flops" in w:
+        # trip-count-weighted HLO costs (preferred; XLA's module-level
+        # numbers count scan bodies once)
+        flops_dev = w["dot_flops"]
+        bytes_dev = w["hbm_bytes"]
+        coll_dev = w["collective_bytes_total"]
+    else:
+        flops_dev = rec["cost"].get("flops", 0.0) or 0.0
+        bytes_dev = rec["cost"].get("bytes accessed", 0.0) or 0.0
+        coll_dev = sum(v["bytes"] for v in rec["collectives"].values())
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_collective = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+
+    counts = counts or param_counts(rec["arch"])
+    # tokens processed by this step
+    if rec["mode"] == "train":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        mult = 3.0          # fwd + bwd (2x)
+    elif rec["mode"] == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        mult = 1.0
+    else:
+        tokens = rec["global_batch"]          # one token per sequence
+        mult = 1.0
+    model_flops = 2.0 * counts["active"] * tokens * mult
+    hlo_total = flops_dev * rec["devices"]
+    useful = model_flops / hlo_total if hlo_total else 0.0
+
+    hbm_gib = None
+    mem = rec.get("memory", {})
+    if mem.get("temp_bytes_per_device") is not None:
+        hbm_gib = (mem["temp_bytes_per_device"]
+                   + (mem.get("argument_bytes_per_device") or 0)) / 2 ** 30
+
+    suggestion = {
+        "compute": "raise arithmetic efficiency: larger fused matmul tiles /"
+                   " fewer remat passes",
+        "memory": "cut HBM traffic: smaller f32 transients (attention/moe"
+                  " chunks), fuse elementwise chains, bf16 logits",
+        "collective": "reshard to cut boundary bytes: bigger per-shard"
+                      " blocks, overlap FSDP gathers, all-to-all dispatch",
+    }[dominant]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "mode": rec["mode"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_collective, "dominant": dominant,
+        "model_flops": model_flops, "hlo_flops_total": hlo_total,
+        "useful_ratio": useful,
+        "hbm_gib_per_device": hbm_gib,
+        "suggestion": suggestion,
+    }
+
+
+def roofline_table(dryrun_dir: str = "results/dryrun",
+                   mesh: str = "pod16x16") -> List[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec["arch"].startswith("cascade-"):
+            continue      # cascade records are reported in §Perf
+        rows.append(roofline_from_record(rec))
+    return rows
+
+
+def format_table(rows: List[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'dominant':>10s} {'useful':>7s} {'HBM GiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} "
+            f"{r['t_compute_s']*1e3:9.2f}m {r['t_memory_s']*1e3:9.2f}m "
+            f"{r['t_collective_s']*1e3:9.2f}m {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.2f} "
+            f"{(r['hbm_gib_per_device'] or 0):8.1f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"
+    print(format_table(roofline_table(mesh=mesh)))

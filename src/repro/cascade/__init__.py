@@ -1,0 +1,13 @@
+"""The paper's confidence-gated cascade as pure JAX (static shapes).
+
+``gate``      — BP/AP threshold logic on batched confidences.
+``routing``   — sort-based compaction of escalated rows (beyond-paper
+                optimization: the cloud model touches only a bounded slice).
+``ecc_infer`` — edge-model/cloud-model collaborative decode under a mesh.
+"""
+from repro.cascade.gate import GateThresholds, basic_gate, adaptive_thresholds
+from repro.cascade.routing import compact_escalations, scatter_back
+from repro.cascade.ecc_infer import CascadeLM
+
+__all__ = ["GateThresholds", "basic_gate", "adaptive_thresholds",
+           "compact_escalations", "scatter_back", "CascadeLM"]

@@ -1,0 +1,135 @@
+"""Edge/cloud collaborative LM inference — the video-query cascade
+transposed to the LM workloads ACE hosts (inter-model ECC inference, §2).
+
+Requests are one-shot queries (the LM analog of a crop): the *edge* model
+(a shallow same-vocab draft) prefills every request and emits a next-token
+distribution; requests whose max-softmax confidence falls inside the BP band
+are *escalated*: compacted to a fixed-capacity slice and prefilled by the
+*cloud* model, whose prediction overrides the edge one. On a mesh, the edge
+model lives replicated across ``data`` shards and the cloud model
+tensor-parallel across ``model`` — the compaction gather is the WAN hop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cascade.gate import (ESCALATE, GateThresholds, basic_gate,
+                                confidence_from_logits, gate_counts,
+                                make_thresholds)
+from repro.cascade.routing import (compact_escalations, gather_compacted,
+                                   scatter_back)
+from repro.configs.base import ModelConfig, Stage
+from repro.models.model import LM
+
+
+def edge_variant(cfg: ModelConfig, *, layers: int = 4,
+                 d_model: Optional[int] = None) -> ModelConfig:
+    """A shallow same-vocab draft of ``cfg`` to play EOC against its COC."""
+    import dataclasses as dc
+    d = d_model or max(256, cfg.d_model // 4)
+    heads = max(1, cfg.num_heads // 4)
+    ratio = max(1, cfg.num_heads // cfg.num_kv_heads)
+    stages = []
+    remaining = layers
+    for st in cfg.stages:
+        if remaining <= 0:
+            break
+        take = min(remaining, st.repeat)
+        stages.append(Stage(blocks=st.blocks, repeat=take))
+        remaining -= take
+    # pad with the first stage's block type if the model is too shallow
+    while remaining > 0:
+        stages.append(Stage(blocks=cfg.stages[0].blocks, repeat=remaining))
+        remaining = 0
+    n_layers = sum(len(s.blocks) * s.repeat for s in stages)
+    moe = None
+    if cfg.moe is not None:
+        moe = dc.replace(cfg.moe, num_experts=min(cfg.moe.num_experts, 8),
+                         num_experts_per_tok=min(cfg.moe.num_experts_per_tok, 2),
+                         d_ff_expert=max(256, cfg.moe.d_ff_expert // 4),
+                         num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+                         d_ff_shared=max(256, cfg.moe.d_ff_shared // 4)
+                         if cfg.moe.num_shared_experts else 0)
+    mla = None
+    if cfg.mla is not None:
+        mla = dc.replace(cfg.mla, q_lora_rank=256, kv_lora_rank=128)
+    return dc.replace(
+        cfg, name=cfg.name + "-edge", num_layers=n_layers, d_model=d,
+        num_heads=heads, num_kv_heads=max(1, heads // min(ratio, heads)),
+        head_dim=64, d_ff=max(256, cfg.d_ff // 4) if cfg.d_ff else 0,
+        stages=tuple(stages), moe=moe, mla=mla, mtp_depth=0)
+
+
+@dataclasses.dataclass
+class CascadeLM:
+    """The ACE inter-model cascade over two LMs sharing a tokenizer."""
+    edge: LM
+    cloud: LM
+    thresholds: GateThresholds = None
+    capacity_frac: float = 0.25     # cloud slice size as a fraction of B
+
+    def __post_init__(self):
+        assert self.edge.cfg.padded_vocab == self.cloud.cfg.padded_vocab, \
+            "cascade models must share a vocabulary"
+        if self.thresholds is None:
+            self.thresholds = make_thresholds()
+
+    def capacity(self, batch: int) -> int:
+        return max(1, int(batch * self.capacity_frac))
+
+    # -- the jittable serving step (lowered by the dry-run) -------------------
+    def serve_step(self, edge_params, cloud_params, batch: dict):
+        """batch['tokens']: (B, S) one-shot queries. Returns dict with final
+        predictions, per-request route codes, and boundary-traffic bytes."""
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        cap = self.capacity(b)
+
+        edge_logits, _, _, _ = self.edge.forward(edge_params, batch)
+        edge_last = edge_logits[:, -1, :]                     # (B, V)
+        conf = confidence_from_logits(edge_last)
+        routes = basic_gate(conf, self.thresholds)
+        esc = routes == ESCALATE
+
+        routing = compact_escalations(esc, cap)
+        cloud_batch = {"tokens": gather_compacted(tokens, routing, cap)}
+        for k, v in batch.items():
+            if k not in ("tokens", "labels"):
+                cloud_batch[k] = gather_compacted(v, routing, cap)
+        cloud_logits, _, _, _ = self.cloud.forward(cloud_params, cloud_batch)
+        cloud_last = cloud_logits[:, -1, :]                   # (cap, V)
+
+        final = scatter_back(edge_last, cloud_last, routing)
+        pred = jnp.argmax(final, axis=-1)
+        counts = gate_counts(routes)
+        # boundary traffic: escalated token ids up + logits (or argmax) down
+        wan_bytes = (jnp.minimum(counts["escalate"], cap)
+                     * (tokens.shape[1] * 4 + 4))
+        return {"pred": pred, "conf": conf, "routes": routes,
+                "edge_pred": jnp.argmax(edge_last, axis=-1),
+                "wan_bytes": wan_bytes, **counts}
+
+    def lockstep_step(self, edge_params, cloud_params, batch: dict):
+        """Paper-faithful baseline (no compaction): the cloud model sees the
+        full batch; the gate only selects which logits win. Same accuracy,
+        strictly more cloud compute + boundary bytes — the §Perf baseline the
+        compacted version is measured against."""
+        tokens = batch["tokens"]
+        edge_logits, _, _, _ = self.edge.forward(edge_params, batch)
+        edge_last = edge_logits[:, -1, :]
+        conf = confidence_from_logits(edge_last)
+        routes = basic_gate(conf, self.thresholds)
+        cloud_logits, _, _, _ = self.cloud.forward(cloud_params, batch)
+        cloud_last = cloud_logits[:, -1, :]
+        esc = (routes == ESCALATE)[:, None]
+        final = jnp.where(esc, cloud_last, edge_last)
+        counts = gate_counts(routes)
+        wan_bytes = jnp.int32(tokens.shape[0] * (tokens.shape[1] * 4 + 4))
+        return {"pred": jnp.argmax(final, axis=-1), "conf": conf,
+                "routes": routes,
+                "edge_pred": jnp.argmax(edge_last, axis=-1),
+                "wan_bytes": wan_bytes, **counts}

@@ -1,0 +1,74 @@
+"""Confidence gate (paper §5.1.2 BP/AP) on batched tensors.
+
+BP: accept conf >= hi; drop conf < lo; escalate otherwise.
+AP: thresholds become *state* updated from EIL estimates with jax control
+flow — the tensorized analog of the simulator's AdvancedPolicy, usable
+inside a jitted serving step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+ACCEPT, DROP, ESCALATE = 0, 1, 2
+
+
+class GateThresholds(NamedTuple):
+    hi: jnp.ndarray          # accept threshold (scalar f32)
+    lo: jnp.ndarray          # drop threshold
+
+
+def make_thresholds(hi: float = 0.8, lo: float = 0.1) -> GateThresholds:
+    return GateThresholds(jnp.float32(hi), jnp.float32(lo))
+
+
+def basic_gate(conf: jnp.ndarray, th: GateThresholds) -> jnp.ndarray:
+    """conf: (...,) f32 in [0,1] -> route codes (ACCEPT/DROP/ESCALATE)."""
+    return jnp.where(conf >= th.hi, ACCEPT,
+                     jnp.where(conf < th.lo, DROP, ESCALATE)).astype(jnp.int32)
+
+
+def gate_counts(routes: jnp.ndarray) -> dict:
+    return {
+        "accept": jnp.sum(routes == ACCEPT),
+        "drop": jnp.sum(routes == DROP),
+        "escalate": jnp.sum(routes == ESCALATE),
+    }
+
+
+class APState(NamedTuple):
+    th: GateThresholds
+    eil_edge: jnp.ndarray    # EWMA of edge latency estimate
+    eil_cloud: jnp.ndarray
+
+
+def ap_init(hi: float = 0.8, lo: float = 0.1) -> APState:
+    return APState(make_thresholds(hi, lo), jnp.float32(0.0), jnp.float32(0.0))
+
+
+def adaptive_thresholds(state: APState, eil_edge: jnp.ndarray,
+                        eil_cloud: jnp.ndarray, *, ewma: float = 0.2,
+                        deteriorate_s: float = 0.3, shrink: float = 0.1,
+                        recover: float = 0.02, hi0: float = 0.8,
+                        lo0: float = 0.1) -> APState:
+    """One AP update step (pure; lax.cond-free via where)."""
+    e = (1 - ewma) * state.eil_edge + ewma * eil_edge
+    c = (1 - ewma) * state.eil_cloud + ewma * eil_cloud
+    worst = jnp.maximum(e, c)
+    band = state.th.hi - state.th.lo
+    hi_shrunk = jnp.maximum(0.5, state.th.hi - shrink * band)
+    lo_shrunk = jnp.minimum(0.45, state.th.lo + shrink * band)
+    hi_rec = jnp.minimum(hi0, state.th.hi + recover)
+    lo_rec = jnp.maximum(lo0, state.th.lo - recover)
+    bad = worst > deteriorate_s
+    th = GateThresholds(jnp.where(bad, hi_shrunk, hi_rec),
+                        jnp.where(bad, lo_shrunk, lo_rec))
+    return APState(th, e, c)
+
+
+def confidence_from_logits(logits: jnp.ndarray) -> jnp.ndarray:
+    """Max-softmax confidence over the final axis, f32."""
+    return jnp.max(jax.nn.softmax(logits.astype(jnp.float32), axis=-1),
+                   axis=-1)

@@ -1,0 +1,67 @@
+"""Static-shape escalation routing.
+
+JAX needs static shapes, so 'send only escalated crops to the cloud' becomes
+sort-based compaction into a fixed-capacity slice: escalated rows are moved
+to the front (stable order), the cloud model runs on the first ``capacity``
+rows only, and results scatter back. Escalations beyond capacity fall back
+to the edge result (graceful degradation — the tensor analog of the
+simulator's bounded queues).
+
+With the batch sharded on the data axis and the cloud model on the model
+axis, the gather of compacted rows is exactly the edge->cloud WAN transfer;
+its bytes are what §Roofline meters for the cascade.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Routing(NamedTuple):
+    order: jnp.ndarray        # (B,) permutation: escalated first
+    inverse: jnp.ndarray      # (B,) inverse permutation
+    num_escalated: jnp.ndarray  # scalar int32
+    kept: jnp.ndarray         # (capacity,) bool: slot holds a real escalation
+
+
+def compact_escalations(escalate_mask: jnp.ndarray,
+                        capacity: int) -> Routing:
+    """escalate_mask: (B,) bool. Stable-sort escalated rows to the front."""
+    b = escalate_mask.shape[0]
+    # stable argsort of (not escalated): False (escalated) sorts first
+    key = (~escalate_mask).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    inverse = jnp.argsort(order)
+    num = jnp.sum(escalate_mask.astype(jnp.int32))
+    kept = jnp.arange(capacity) < jnp.minimum(num, capacity)
+    return Routing(order, inverse, num, kept)
+
+
+def gather_compacted(x: jnp.ndarray, routing: Routing,
+                     capacity: int) -> jnp.ndarray:
+    """Rows for the cloud model: first ``capacity`` rows in escalated-first
+    order. x: (B, ...) -> (capacity, ...)."""
+    return jnp.take(x, routing.order[:capacity], axis=0)
+
+
+def scatter_back(edge_result: jnp.ndarray, cloud_result: jnp.ndarray,
+                 routing: Routing) -> jnp.ndarray:
+    """Overlay cloud results onto escalated rows (within capacity).
+
+    edge_result: (B, ...); cloud_result: (capacity, ...)."""
+    b = edge_result.shape[0]
+    capacity = cloud_result.shape[0]
+    padded = jnp.concatenate(
+        [cloud_result,
+         jnp.zeros((b - capacity,) + cloud_result.shape[1:],
+                   cloud_result.dtype)], axis=0) if capacity < b else \
+        cloud_result[:b]
+    in_order = jnp.take(padded, routing.inverse, axis=0)
+    used = jnp.concatenate(
+        [routing.kept, jnp.zeros((b - capacity,), bool)], axis=0) \
+        if capacity < b else routing.kept[:b]
+    used_in_order = jnp.take(used, routing.inverse, axis=0)
+    shape = (b,) + (1,) * (edge_result.ndim - 1)
+    return jnp.where(used_in_order.reshape(shape), in_order, edge_result)

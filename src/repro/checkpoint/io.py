@@ -1,0 +1,80 @@
+"""Pytree checkpointing to .npz (no orbax offline).
+
+Flat key-path encoding keeps the format structure-agnostic: a checkpoint can
+be restored into any pytree with the same key paths (used by the federated
+trainer and the serving engine alike). Atomic rename guards against torn
+writes; ``keep`` bounds disk usage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.utils.tree import flat_paths
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = flat_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    path = os.path.join(directory, f"step_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    _gc(directory, keep)
+    return path
+
+
+def load_checkpoint(directory: str, template: Any,
+                    step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    paths = flat_paths(template)
+    missing = set(paths) - set(flat)
+    extra = set(flat) - set(paths)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    leaves_in_order = [flat[k] for k in paths]
+    treedef = jax.tree.structure(template)
+    restored = jax.tree.unflatten(treedef, [
+        np.asarray(v, dtype=np.asarray(t).dtype)
+        for v, t in zip(leaves_in_order, jax.tree.leaves(template))])
+    return restored, step
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.search(name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.search(name)
+        if m:
+            steps.append(int(m.group(1)))
+    for s in sorted(steps)[:-keep]:
+        os.remove(os.path.join(directory, f"step_{s}.npz"))

@@ -1,0 +1,14 @@
+"""ACE platform core — the paper's primary contribution.
+
+Three layers (paper §4): platform layer (controller, orchestrator, API
+server, pub/sub, monitoring), resource layer (EC/CC infrastructure, node
+agents, resource-level services), application layer (topology-driven
+deployment automation, reusable in-app controller, the four ECCI patterns).
+"""
+from repro.core.platform import AcePlatform
+from repro.core.topology import Topology, Component
+from repro.core.orchestrator import Orchestrator, DeploymentPlan
+from repro.core.pubsub import Broker
+
+__all__ = ["AcePlatform", "Topology", "Component", "Orchestrator",
+           "DeploymentPlan", "Broker"]

@@ -1,0 +1,7 @@
+"""Reusable in-app controller (paper §4.4.2): control/workload plane
+separation, general control operations, BP/AP policies."""
+from repro.core.inapp.controller import InAppController, ECController, CCController
+from repro.core.inapp.policies import BasicPolicy, AdvancedPolicy
+
+__all__ = ["InAppController", "ECController", "CCController",
+           "BasicPolicy", "AdvancedPolicy"]

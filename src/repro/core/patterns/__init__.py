@@ -1,0 +1,10 @@
+"""The four ECCI application patterns (paper §2): ECC processing, ECC
+training, ECC inference, hybrid collaboration."""
+from repro.core.patterns.processing import PipelineStage, pipeline_topology
+from repro.core.patterns.inference import CascadePair, PartitionedLM, best_partition
+from repro.core.patterns.training import FedAvgAggregator, FedWorker, fedavg
+from repro.core.patterns.hybrid import TeacherComponent, StudentComponent
+
+__all__ = ["PipelineStage", "pipeline_topology", "CascadePair",
+           "PartitionedLM", "best_partition", "FedAvgAggregator", "FedWorker", "fedavg",
+           "TeacherComponent", "StudentComponent"]

@@ -1,0 +1,158 @@
+"""ECC inference pattern (paper §2): intra-model partitioning and
+inter-model cascades.
+
+Intra-model (Neurosurgeon/SPINN/JointDNN class): a single model is split by
+layers; the edge runs the bottom, ships the boundary activation across the
+WAN, the cloud finishes. :func:`best_partition` is the in-app control policy
+deciding the split point from napkin latency math — the paper's Principle
+Four example.
+
+Inter-model (VideoEdge/SurveilEdge class): a small edge model and a large
+cloud model collaborate through a confidence gate — :class:`CascadePair`
+(the tensor-level LM version lives in ``repro.cascade``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import LM
+from repro.models.layers import rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Intra-model partitioning
+# ---------------------------------------------------------------------------
+
+def _stage_layer_spans(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    spans, start = [], 0
+    for st in cfg.stages:
+        spans.append((start, start + st.repeat))
+        start += st.repeat
+    return spans
+
+
+@dataclasses.dataclass
+class PartitionedLM:
+    """Split an LM at a scanned-layer boundary: layers [0, split) on the
+    edge, [split, L_scan) plus head on the cloud."""
+    lm: LM
+    split: int           # in scanned-layer units (stage repeats)
+
+    def _sliced(self, params, lo_hi):
+        lo, hi = lo_hi
+        spans = _stage_layer_spans(self.lm.cfg)
+        out = []
+        for (s0, s1), stage_params in zip(spans, params["stages"]):
+            a, b = max(lo, s0), min(hi, s1)
+            if a >= b:
+                out.append(None)
+                continue
+            out.append(jax.tree.map(lambda x: x[a - s0:b - s0], stage_params))
+        return out
+
+    def edge_forward(self, params, batch):
+        """Bottom of the network on the edge; returns the boundary tensor."""
+        lm = self.lm
+        x, positions = lm._embed_inputs(params, batch)
+        for stage, sp in zip(lm.cfg.stages, self._sliced(params, (0, self.split))):
+            if sp is None:
+                continue
+            x, _, _ = lm._stage_forward(stage, sp, x, positions,
+                                        want_cache=False, cache_width=None,
+                                        train=False)
+        return x, positions
+
+    def cloud_forward(self, params, hidden, positions):
+        lm = self.lm
+        total = sum(st.repeat for st in lm.cfg.stages)
+        x = hidden
+        for stage, sp in zip(lm.cfg.stages,
+                             self._sliced(params, (self.split, total))):
+            if sp is None:
+                continue
+            x, _, _ = lm._stage_forward(stage, sp, x, positions,
+                                        want_cache=False, cache_width=None,
+                                        train=False)
+        x = rmsnorm(params["final_norm"], x, lm.cfg.rms_eps)
+        return lm._logits(params, x)
+
+    def boundary_bytes(self, batch_size: int, seq_len: int) -> int:
+        d = self.lm.cfg.d_model
+        itemsize = jnp.dtype(self.lm.cfg.param_dtype).itemsize
+        return batch_size * seq_len * d * itemsize
+
+
+def layer_flops(cfg: ModelConfig, seq_len: int) -> float:
+    """Per-scanned-layer forward FLOPs estimate (weights-dominated)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    attn_proj = 2 * seq_len * d * (h + 2 * kv) * hd + 2 * seq_len * h * hd * d
+    attn_score = 4 * seq_len * seq_len * h * hd
+    if cfg.moe is not None:
+        f = cfg.moe.d_ff_expert * cfg.moe.num_experts_per_tok
+        f += cfg.moe.d_ff_shared
+    else:
+        f = cfg.d_ff
+    mlp = 6 * seq_len * d * f
+    return float(attn_proj + attn_score + mlp)
+
+
+def best_partition(cfg: ModelConfig, *, batch: int, seq_len: int,
+                   edge_flops_s: float, cloud_flops_s: float,
+                   uplink_mbps: float, delay_s: float) -> Tuple[int, float]:
+    """Neurosurgeon-style split search: argmin_k edge(k) + wan(k) + cloud(k).
+
+    Returns (best split in scanned layers, estimated E2E seconds)."""
+    total = sum(st.repeat for st in cfg.stages)
+    per_layer = layer_flops(cfg, seq_len) * batch
+    d = cfg.d_model
+    itemsize = jnp.dtype(cfg.param_dtype).itemsize
+    hidden_bytes = batch * seq_len * d * itemsize
+    token_bytes = batch * seq_len * 4
+    best_k, best_t = 0, float("inf")
+    for k in range(total + 1):
+        edge_t = k * per_layer / edge_flops_s
+        cloud_t = (total - k) * per_layer / cloud_flops_s
+        wire = token_bytes if k == 0 else (0 if k == total else hidden_bytes)
+        wan_t = (wire * 8 / (uplink_mbps * 1e6)) + (delay_s if wire else 0.0)
+        t = edge_t + wan_t + cloud_t
+        if t < best_t:
+            best_k, best_t = k, t
+    return best_k, best_t
+
+
+# ---------------------------------------------------------------------------
+# Inter-model cascade over classifiers (paper §5 EOC/COC shape)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CascadePair:
+    """Edge/cloud classifier cascade with the BP confidence gate."""
+    edge_apply: object          # params, images -> logits
+    cloud_apply: object
+    accept: float = 0.8
+    drop: float = 0.1
+
+    def edge_step(self, edge_params, images):
+        logits = self.edge_apply(edge_params, images)
+        probs = jax.nn.softmax(logits, axis=-1)
+        conf = jnp.max(probs, axis=-1)
+        pred = jnp.argmax(probs, axis=-1)
+        accept = (conf >= self.accept) & (pred == 1)
+        drop = conf < self.drop
+        escalate = ~accept & ~drop
+        # crops predicted 'negative' confidently are also drops
+        neg = (conf >= self.accept) & (pred != 1)
+        return {"pred": pred, "conf": conf, "accept": accept,
+                "drop": drop | neg, "escalate": escalate & ~neg}
+
+    def cloud_step(self, cloud_params, images, target_class: int):
+        logits = self.cloud_apply(cloud_params, images)
+        top5 = jax.lax.top_k(logits, min(5, logits.shape[-1]))[1]
+        hit = jnp.any(top5 == target_class, axis=-1)
+        return {"hit": hit}

@@ -1,0 +1,108 @@
+"""ECC training pattern (paper §2): federated-style collaborative training.
+
+ECs train locally on private data; model updates cross the WAN through the
+file service (data plane) announced over the bridged message service
+(control plane); the CC aggregates (FedAvg) and redistributes. The JAX math
+(``fedavg``) is shared with the tensor-level federated trainer in
+``repro.training.federated`` — here it is wired into ACE components.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.registry import image
+
+
+def fedavg(param_sets: List[Any], weights: Optional[List[float]] = None):
+    """Weighted average of parameter pytrees."""
+    n = len(param_sets)
+    assert n > 0
+    w = np.asarray(weights if weights is not None else [1.0] * n, np.float64)
+    w = w / w.sum()
+    return jax.tree.map(
+        lambda *leaves: sum(wi * l for wi, l in zip(w, leaves)), *param_sets)
+
+
+@image("repro/pattern/fed-worker")
+class FedWorker:
+    """EC-side trainer: local steps on local data, then upload."""
+
+    def __init__(self, local_train: Callable = None, data=None,
+                 model_bytes: int = 1_000_000, rounds: int = 1):
+        self.local_train = local_train
+        self.data = data
+        self.model_bytes = model_bytes
+        self.rounds_left = rounds
+        self.params = None
+        self.history: List[float] = []
+
+    def start(self, ctx) -> None:
+        self.ctx = ctx
+        files = ctx.services["file"]
+        files.on_available(ctx.cluster, "fed/global-*",
+                           lambda meta: self._on_global(meta))
+
+    def _on_global(self, meta: dict) -> None:
+        files = self.ctx.services["file"]
+        files.get(meta["bucket"], meta["key"], self.ctx.cluster,
+                  self._train_round)
+
+    def _train_round(self, global_params) -> None:
+        if self.rounds_left <= 0:
+            return
+        self.rounds_left -= 1
+        params, loss = self.local_train(global_params, self.data)
+        self.params = params
+        self.history.append(float(loss))
+        files = self.ctx.services["file"]
+        files.put("fed", f"update-{self.ctx.instance_id}-{self.rounds_left}",
+                  (params, len(self.data[0]) if self.data else 1),
+                  self.model_bytes, self.ctx.cluster)
+
+
+@image("repro/pattern/fed-aggregator")
+class FedAvgAggregator:
+    """CC-side aggregator: collects EC updates, FedAvgs, redistributes."""
+
+    def __init__(self, init_params=None, num_workers: int = 1,
+                 rounds: int = 1, model_bytes: int = 1_000_000):
+        self.global_params = init_params
+        self.num_workers = num_workers
+        self.rounds_left = rounds
+        self.model_bytes = model_bytes
+        self.pending: List = []
+        self.round_idx = 0
+
+    def start(self, ctx) -> None:
+        self.ctx = ctx
+        files = ctx.services["file"]
+        files.on_available(ctx.cluster, "fed/update-*", self._on_update)
+        self._broadcast()
+
+    def _broadcast(self) -> None:
+        files = self.ctx.services["file"]
+        files.put("fed", f"global-{self.round_idx}",
+                  self.global_params, self.model_bytes, self.ctx.cluster,
+                  lifecycle="temporary")
+
+    def _on_update(self, meta: dict) -> None:
+        files = self.ctx.services["file"]
+        files.get(meta["bucket"], meta["key"], self.ctx.cluster,
+                  self._collect)
+
+    def _collect(self, payload) -> None:
+        params, nsamples = payload
+        self.pending.append((params, nsamples))
+        if len(self.pending) >= self.num_workers:
+            sets = [p for p, _ in self.pending]
+            weights = [float(n) for _, n in self.pending]
+            self.global_params = fedavg(sets, weights)
+            self.pending = []
+            self.round_idx += 1
+            self.rounds_left -= 1
+            self.ctx.log("fed_round", round=self.round_idx)
+            if self.rounds_left > 0:
+                self._broadcast()

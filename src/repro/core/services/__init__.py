@@ -1,0 +1,5 @@
+"""Resource-level services (paper §4.3.2): message, object store, file."""
+from repro.core.services.object_store import ObjectStore
+from repro.core.services.file_service import FileService
+
+__all__ = ["ObjectStore", "FileService"]

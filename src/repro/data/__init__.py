@@ -1,0 +1,6 @@
+"""Data pipelines: synthetic token streams, synthetic video crops, sharded
+host loading."""
+from repro.data.synthetic import TokenStream, synth_crops
+from repro.data.loader import ShardedLoader
+
+__all__ = ["TokenStream", "synth_crops", "ShardedLoader"]

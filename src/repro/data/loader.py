@@ -1,0 +1,35 @@
+"""Host-side sharded loading: numpy batches -> device arrays laid out to the
+active mesh (batch sharded along the data/pod axes)."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+
+class ShardedLoader:
+    def __init__(self, it: Iterator[Dict[str, np.ndarray]],
+                 mesh: Optional[Mesh] = None,
+                 batch_axes: tuple = ("data",)):
+        self.it = it
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, jnp.ndarray]:
+        host = next(self.it)
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in host.items()}
+        sharding = {}
+        for k, v in host.items():
+            axes = [a for a in self.batch_axes if a in self.mesh.shape]
+            size = int(np.prod([self.mesh.shape[a] for a in axes])) or 1
+            spec = (tuple(axes),) + (None,) * (v.ndim - 1) \
+                if v.shape[0] % size == 0 else (None,) * v.ndim
+            sharding[k] = NamedSharding(self.mesh, PS(*spec))
+        return {k: jax.device_put(v, sharding[k]) for k, v in host.items()}

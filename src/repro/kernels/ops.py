@@ -1,0 +1,64 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+On TPU the Pallas kernels run natively; on CPU (this container) the default
+is the jnp oracle (running full models through interpret mode would be
+pathologically slow), while tests force ``use_kernel=True`` with
+``interpret=True`` to exercise the kernel bodies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.cascade_gate import cascade_gate as _gate_kernel
+from repro.kernels.flash_attention import flash_attention as _fa_kernel
+from repro.kernels.rglru_scan import rglru_scan as _rglru_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "use_kernel", "interpret"))
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None,
+              use_kernel: Optional[bool] = None,
+              interpret: Optional[bool] = None):
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _fa_kernel(q, k, v, causal=causal, window=window,
+                          interpret=not _on_tpu() if interpret is None
+                          else interpret)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def rglru(a, b, h0, *, use_kernel: Optional[bool] = None,
+          interpret: Optional[bool] = None):
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _rglru_kernel(a, b, h0,
+                             interpret=not _on_tpu() if interpret is None
+                             else interpret)
+    return _ref.rglru_scan_ref(a, b, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("hi", "lo", "use_kernel",
+                                             "interpret"))
+def gate(logits, *, hi: float = 0.8, lo: float = 0.1,
+         use_kernel: Optional[bool] = None,
+         interpret: Optional[bool] = None):
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _gate_kernel(logits, hi=hi, lo=lo,
+                            interpret=not _on_tpu() if interpret is None
+                            else interpret)
+    from repro.cascade.gate import GateThresholds
+    import jax.numpy as jnp
+    out = _ref.cascade_gate_ref(
+        logits, GateThresholds(jnp.float32(hi), jnp.float32(lo)))
+    return out["conf"], out["routes"], out["counts"]

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every kernel (the correctness contracts)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cascade.gate import GateThresholds
+from repro.models.attention import blockwise_attention
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Dense reference."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg,
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)   # right-aligned queries
+    kpos = jnp.arange(sk)[None, :]
+    valid = jnp.ones((sq, sk), bool)
+    if causal:
+        valid &= kpos <= qpos
+    if window is not None:
+        valid &= kpos > (qpos - window)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def flash_attention_streaming_ref(q, k, v, *, causal: bool = True,
+                                  window: Optional[int] = None,
+                                  kv_chunk: int = 128) -> jnp.ndarray:
+    """The streaming-softmax formulation shared with the model code."""
+    b, sq = q.shape[0], q.shape[1]
+    sk = k.shape[1]
+    qpos = jnp.broadcast_to(jnp.arange(sq) + (sk - sq), (b, sq))
+    kpos = jnp.broadcast_to(jnp.arange(sk), (b, sk))
+    if not causal:
+        raise NotImplementedError("oracle is causal-only")
+    return blockwise_attention(q, k, v, qpos, kpos, window=window,
+                               scale=q.shape[-1] ** -0.5, kv_chunk=kv_chunk)
+
+
+def rglru_scan_ref(a, b, h0) -> tuple:
+    """h_t = a_t * h_{t-1} + b_t. a, b: (B, S, W) f32; h0: (B, W).
+    Returns (h (B,S,W), h_last (B,W))."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    (h_last, hs) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def cascade_gate_ref(logits, th: GateThresholds) -> dict:
+    """logits: (T, V) -> conf (T,), routes (T,), counts (3,)."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1))
+    conf = jnp.exp(m - lse)
+    routes = jnp.where(conf >= th.hi, 0,
+                       jnp.where(conf < th.lo, 1, 2)).astype(jnp.int32)
+    counts = jnp.stack([jnp.sum(routes == i) for i in range(3)]).astype(
+        jnp.int32)
+    return {"conf": conf, "routes": routes, "counts": counts}

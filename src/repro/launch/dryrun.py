@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape), lower + compile the corresponding
+step function on the production meshes (single-pod 16x16 and multi-pod
+2x16x16) and record memory analysis, cost analysis, and the collective-op
+byte inventory parsed from the optimized HLO — the inputs to §Roofline.
+
+The XLA_FLAGS line above MUST precede any jax import: jax locks the device
+count on first initialization. Results are cached as JSON per run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k [--multi-pod] [--force]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.configs import ASSIGNED_ARCHS
+from repro.configs.shapes import INPUT_SHAPES, get_shape
+from repro.launch import sharding_rules as sr
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_step_fn, resolved_config
+from repro.models.model import LM
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 0.125, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|tuple\([^)]*\)|[\w\[\],{}:# ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in an HLO result clause."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += int(n * _DTYPE_BYTES[dtype])
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind op counts and (per-device) result bytes."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _OP_RE.search(stripped)
+        if not m:
+            continue
+        kind = m.group(1)
+        if kind + "-done(" in stripped:
+            continue  # don't double count start/done pairs
+        lhs = stripped.split(" = ", 1)
+        if len(lhs) != 2:
+            continue
+        result_clause = lhs[1].split(kind)[0]
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(result_clause)
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            out_dir: str = "results/dryrun", force: bool = False,
+            verbose: bool = True) -> Optional[dict]:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    shape = get_shape(shape_name)
+    cfg = resolved_config(arch, shape_name)
+    lm = LM(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    step, abstract_in, axes = make_step_fn(lm, shape)
+    pspec = sr.param_pspecs(mesh, abstract_in[0], axes, shape.mode)
+    if shape.mode == "train":
+        params_abs, opt_abs, batch_abs = abstract_in
+        in_shardings = (pspec, sr.opt_pspecs(mesh, pspec, opt_abs),
+                        sr.batch_pspecs(mesh, batch_abs))
+        out_shardings = (pspec, sr.opt_pspecs(mesh, pspec, opt_abs), None)
+    elif shape.mode == "prefill":
+        params_abs, batch_abs = abstract_in
+        in_shardings = (pspec, sr.batch_pspecs(mesh, batch_abs))
+        out_shardings = None
+    else:
+        params_abs, cache_abs, tok_abs, pos_abs = abstract_in
+        cache_spec = sr.cache_pspecs(mesh, cfg, cache_abs)
+        # decode inputs are replicated (see act_rules decode note)
+        in_shardings = (pspec, cache_spec,
+                        jax.sharding.PartitionSpec(),
+                        jax.sharding.PartitionSpec())
+        out_shardings = (None, cache_spec)
+
+    def to_named(tree):
+        if tree is None:
+            return None
+        return jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    with mesh:
+        with sh.use_rules(mesh, sr.act_rules(
+                mesh, shape.mode,
+                # SP is a measured win only for plain dense stacks: grouped
+                # MoE dispatch, tied unembeddings and multi-head frontends
+                # all trigger pathological GSPMD resharding (§Perf T1)
+                seq_parallel=(cfg.moe is None and not cfg.tie_embeddings
+                              and cfg.frontend.kind == "none"))):
+            jitted = jax.jit(
+                step,
+                in_shardings=to_named(in_shardings),
+                out_shardings=(None if out_shardings is None else tuple(
+                    to_named(t) for t in out_shardings)))
+            lowered = jitted.lower(*abstract_in)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"--- {arch} x {shape_name} x {mesh_tag}")
+        print(mem)       # proves it fits (bytes per device)
+        print({k: v for k, v in sorted(cost.items())
+               if k in ("flops", "bytes accessed", "optimal_seconds")})
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # trip-count-weighted costs (XLA's cost_analysis counts scan bodies
+    # once; see repro.analysis.hlo_cost)
+    from repro.analysis.hlo_cost import analyze
+    try:
+        weighted = analyze(hlo)
+    except Exception as e:  # noqa: BLE001 - keep the record either way
+        weighted = {"error": repr(e)}
+    n_dev = mesh.size
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "devices": n_dev,
+        "mode": shape.mode,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": getattr(
+                mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(
+                mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals",
+                  "optimal_seconds") if k in cost},
+        "collectives": coll,
+        "weighted": weighted,
+        "hlo_lines": hlo.count("\n"),
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    import gzip
+    with gzip.open(path.replace(".json", ".hlo.gz"), "wt") as f:
+        f.write(hlo)
+    if verbose:
+        tot = sum(v["bytes"] for v in coll.values())
+        print(f"collectives: { {k: v for k, v in coll.items() if v['count']} }")
+        print(f"total collective bytes/device: {tot/1e6:.1f} MB; "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s")
+    return record
+
+
+def run_cascade(variant: str = "compact", *, cloud_arch: str = "glm4-9b",
+                batch: int = 128, seq: int = 2048, multi_pod: bool = False,
+                capacity_frac: float = 0.25,
+                out_dir: str = "results/dryrun", force: bool = False,
+                verbose: bool = True) -> dict:
+    """Lower the ACE cascade serving step (the paper's technique on LM
+    workloads): 'lockstep' = paper-faithful (cloud sees the full batch),
+    'compact' = beyond-paper sorted-compaction (cloud sees only the
+    escalated slice). Recorded separately in §Perf."""
+    from repro.cascade.ecc_infer import CascadeLM, edge_variant
+    from repro.models import param as P
+
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"cascade-{variant}__b{batch}s{seq}__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    from repro.configs import get_config
+    from repro.models.model import LM
+    cloud_cfg = get_config(cloud_arch)
+    edge_cfg = edge_variant(cloud_cfg, layers=4)
+    cloud, edge = LM(cloud_cfg), LM(edge_cfg)
+    cascade = CascadeLM(edge, cloud, capacity_frac=capacity_frac)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    ep_abs = jax.eval_shape(lambda: edge.init_boxed(jax.random.PRNGKey(0)))
+    cp_abs = jax.eval_shape(lambda: cloud.init_boxed(jax.random.PRNGKey(1)))
+    ep_abs, e_axes = P.unbox(ep_abs)
+    cp_abs, c_axes = P.unbox(cp_abs)
+    batch_abs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+    e_spec = sr.param_pspecs(mesh, ep_abs, e_axes, "prefill")
+    c_spec = sr.param_pspecs(mesh, cp_abs, c_axes, "prefill")
+    b_spec = sr.batch_pspecs(mesh, batch_abs)
+    named = lambda t: jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    step = cascade.serve_step if variant == "compact" \
+        else cascade.lockstep_step
+
+    t0 = time.time()
+    with mesh:
+        with sh.use_rules(mesh, sr.act_rules(mesh, "prefill")):
+            jitted = jax.jit(step, in_shardings=(
+                named(e_spec), named(c_spec), named(b_spec)))
+            lowered = jitted.lower(ep_abs, cp_abs, batch_abs)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    from repro.analysis.hlo_cost import analyze
+    try:
+        weighted = analyze(hlo)
+    except Exception as e:  # noqa: BLE001
+        weighted = {"error": repr(e)}
+    record = {
+        "arch": f"cascade-{variant}({cloud_arch})",
+        "shape": f"query_b{batch}s{seq}", "mesh": mesh_tag,
+        "devices": mesh.size, "mode": "prefill",
+        "seq_len": seq, "global_batch": batch,
+        "lower_s": round(time.time() - t0, 1),
+        "compile_s": 0.0,
+        "memory": {
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")
+                 if k in cost},
+        "collectives": collective_bytes(hlo),
+        "weighted": weighted,
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    if verbose:
+        w = record["weighted"]
+        print(f"--- cascade {variant} x {mesh_tag}: "
+              f"dot_flops={w.get('dot_flops', 0):.3e} "
+              f"coll={w.get('collective_bytes_total', 0)/2**30:.2f} GiB "
+              f"temp={record['memory']['temp_bytes_per_device']/2**30:.1f} GiB")
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--cascade", default=None,
+                    choices=["lockstep", "compact"],
+                    help="lower the ACE cascade step instead of an arch")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    if args.cascade:
+        run_cascade(args.cascade, multi_pod=args.multi_pod,
+                    out_dir=args.out, force=args.force)
+        return 0
+
+    archs = ASSIGNED_ARCHS if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, multi_pod=mp, out_dir=args.out,
+                            force=args.force)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print(f"\nFAILURES ({len(failures)}):")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("\nall dry-runs passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

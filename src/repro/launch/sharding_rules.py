@@ -1,0 +1,150 @@
+"""Mesh sharding rules: logical axes -> mesh axes, spec trees for params,
+optimizer states, caches, and input batches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro import sharding as sh
+from repro.models import param as P
+
+
+def param_rules(mesh: Mesh, mode: str = "train") -> Dict[str, object]:
+    """FSDP on the batch axes, tensor/expert parallel on 'model'.
+
+    Decode differs in two ways (both memory/collective driven, see
+    EXPERIMENTS.md §Dry-run): output-side embed dims (EMBED_OUT) are
+    replicated — sharding an *output* dim over 'data' makes XLA all-gather
+    the weight (GBs) instead of the (KB-sized) decode activation — and the
+    expert axis spreads over BOTH mesh axes (1 expert/chip for deepseek's
+    256) since decode has no optimizer states to co-shard."""
+    fsdp = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    decode = mode == "decode"
+    return {
+        P.EMBED: fsdp,
+        P.EMBED_OUT: None if decode else fsdp,
+        P.VOCAB: "model",
+        P.HEADS: "model",
+        P.KV_HEADS: "model",
+        P.MLP: "model",
+        P.EXPERT: fsdp + ("model",) if decode else "model",
+        P.LRU: "model",
+        P.LORA: None,
+        P.HEAD_DIM: None,
+        P.STACK: None,
+    }
+
+
+def act_rules(mesh: Mesh, mode: str = "train",
+              seq_parallel: bool = True) -> Dict[str, object]:
+    """Activation hints. Decode replicates the (tiny) per-step activations
+    across the batch axes: with weights 2D-sharded (FSDP x TP), batch-sharded
+    decode would force a full weight all-gather per token (measured 15 GB/step
+    on mixtral decode_32k); replicated-batch compute instead pays partial-sum
+    all-reduces on (B, 1, D) activations — MBs, not GBs. KV caches stay
+    batch-sharded (they carry the memory)."""
+    batch = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    return {
+        sh.BATCH: None if mode == "decode" else batch,
+        # Megatron-style sequence parallelism between blocks (train/prefill):
+        # the residual stream's seq dim shards on 'model', turning the
+        # 2x(B,S,D) all-reduces per TP boundary into RS+AG pairs and keeping
+        # norms/MLP fully sharded. Dense archs only: GSPMD thrashes the
+        # grouped-MoE dispatch under a seq-sharded residual (mixtral train
+        # collectives 28 -> 240 s/step measured) — §Perf T1
+        sh.SEQ: "model" if (seq_parallel and mode != "decode") else None,
+        sh.EMBED: None,
+        sh.HEADS: "model",
+        sh.KV: "model",
+        sh.VOCAB: "model",
+        # decode shards experts over BOTH axes to match the decode weight
+        # sharding (1 expert/chip for deepseek) — with the activations on
+        # 'model' only, GSPMD all-gathered the full f32 expert stack every
+        # layer (28 GiB x 58 layers/step measured)
+        sh.EXPERT: batch + ("model",) if mode == "decode" else "model",
+        # expert-capacity slots shard over the batch axes: without this the
+        # (E, C, D) dispatch buffer is replicated (336 GiB/device measured
+        # on mixtral train_4k)
+        sh.EXP_SLOT: None if mode == "decode" else batch,
+        sh.MLP: "model",
+    }
+
+
+def param_pspecs(mesh: Mesh, abstract_params, axes_tree,
+                 mode: str = "train"):
+    """PartitionSpec tree matching the params structure."""
+    rules = param_rules(mesh, mode)
+    return jax.tree.map(
+        lambda leaf, ax: sh.resolve(rules, ax, shape=leaf.shape, mesh=mesh),
+        abstract_params, axes_tree)
+
+
+def opt_pspecs(mesh: Mesh, param_specs, opt_state_abstract):
+    """Optimizer states shard exactly like their parameters (ZeRO)."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=PS(), mu=param_specs, nu=param_specs)
+
+
+def batch_pspecs(mesh: Mesh, batch_abstract):
+    """Input batches: leading dim sharded over the batch axes if divisible."""
+    batch_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    size = 1
+    for a in batch_axes:
+        size *= mesh.shape[a]
+
+    def spec(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % size != 0:
+            return PS()
+        ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        return PS(ba, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch_abstract)
+
+
+def cache_pspecs(mesh: Mesh, cfg, cache_abstract):
+    """Decode caches: (stack, batch, ...) with KV-head dims on 'model'.
+
+    KV caches are (R, B, W, KV, hd): batch on the data axes, kv-heads on
+    'model' when divisible. Recurrent states (R, B, ...) shard batch, and
+    RG-LRU width on 'model'.
+    """
+    batch_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    bsize = 1
+    for a in batch_axes:
+        bsize *= mesh.shape[a]
+    msize = mesh.shape["model"]
+    ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def spec(path, leaf):
+        dims: list = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % bsize == 0:
+            dims[1] = ba
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        # KV caches (R, B, W, KV, hd): no assigned arch has >= 16 kv heads,
+        # so shard the *window* dim on 'model' instead — sequence-parallel
+        # decode (sharded-softmax reductions are tiny vs. gathering caches)
+        if name in ("k", "v") and leaf.ndim == 5:
+            if leaf.shape[3] % msize == 0:
+                dims[3] = "model"
+            elif leaf.shape[2] % msize == 0:
+                dims[2] = "model"
+        if name in ("pos", "ckv", "krope") and leaf.ndim >= 3 \
+                and leaf.shape[2] % msize == 0:
+            dims[2] = "model"      # window dim of MLA caches / pos slots
+        if name == "h" and leaf.ndim == 3 and leaf.shape[2] % msize == 0:
+            dims[2] = "model"      # RG-LRU state width
+        if name == "conv" and leaf.ndim == 4 and leaf.shape[3] % msize == 0:
+            dims[3] = "model"
+        return PS(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abstract)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, PS))

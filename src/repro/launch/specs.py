@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation), per
+(architecture x input shape), plus the step functions the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, apply_long_context
+from repro.configs.shapes import InputShape, get_shape
+from repro.models.model import LM
+
+SDS = jax.ShapeDtypeStruct
+
+
+def resolved_config(arch: str, shape_name: str) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        cfg = apply_long_context(cfg)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Inputs for the step that this shape lowers (see shapes.py)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape: Tuple[int, ...]
+    if cfg.frontend.kind == "audio":
+        tok = (b, s, cfg.frontend.num_codebooks)
+        tok1 = (b, 1, cfg.frontend.num_codebooks)
+    else:
+        tok = (b, s - (cfg.frontend.num_prefix_tokens
+                       if cfg.frontend.kind == "vision" else 0))
+        tok1 = (b, 1)
+    if shape.mode in ("train", "prefill"):
+        batch = {"tokens": SDS(tok, jnp.int32)}
+        if shape.mode == "train":
+            batch["labels"] = SDS(tok, jnp.int32)
+        if cfg.frontend.kind == "vision":
+            batch["image_embeds"] = SDS(
+                (b, cfg.frontend.num_prefix_tokens, cfg.frontend.embed_dim),
+                jnp.dtype(cfg.param_dtype))
+        return batch
+    # decode: ONE new token + a seq_len-context cache + current position
+    return {"tokens": SDS(tok1, jnp.int32),
+            "cur_pos": SDS((), jnp.int32)}
+
+
+def abstract_cache(lm: LM, shape: InputShape):
+    return jax.eval_shape(
+        lambda: lm.init_cache(shape.global_batch, shape.seq_len))
+
+
+def make_step_fn(lm: LM, shape: InputShape, lr_schedule=None):
+    """The callable the dry-run lowers, plus its abstract inputs."""
+    cfg = lm.cfg
+    if shape.mode == "train":
+        from repro.training.train_loop import make_train_step
+        from repro.optim import adamw_init, linear_warmup_cosine
+        sched = lr_schedule or linear_warmup_cosine(3e-4, 100, 10_000)
+        step = make_train_step(lm, sched)
+        params_abs = jax.eval_shape(
+            lambda: lm.init_boxed(jax.random.PRNGKey(0)))
+        from repro.models import param as P
+        params_abs, axes = P.unbox(params_abs)
+        # moments in bf16 for the XXL MoE archs (see DESIGN.md / §Roofline)
+        opt_dtype = jnp.bfloat16 if cfg.name.startswith("deepseek") \
+            else jnp.float32
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_dtype),
+                                 params_abs)
+        batch_abs = input_specs(cfg, shape)
+        return step, (params_abs, opt_abs, batch_abs), axes
+
+    params_abs = jax.eval_shape(lambda: lm.init_boxed(jax.random.PRNGKey(0)))
+    from repro.models import param as P
+    params_abs, axes = P.unbox(params_abs)
+
+    if shape.mode == "prefill":
+        def prefill_step(params, batch):
+            # §Perf B2: unembed only the last position — computing the full
+            # (B, S, V) logits tensor and slicing afterwards wastes
+            # B*S*V flops + traffic
+            logits, caches = lm.prefill(params, batch,
+                                        cache_width=shape.seq_len,
+                                        last_only=True)
+            return logits[:, -1, :], caches
+        batch_abs = input_specs(cfg, shape)
+        return prefill_step, (params_abs, batch_abs), axes
+
+    assert shape.mode == "decode"
+    def serve_step(params, caches, tokens, cur_pos):
+        return lm.decode_step(params, caches, tokens, cur_pos)
+
+    cache_abs = abstract_cache(lm, shape)
+    ins = input_specs(cfg, shape)
+    return serve_step, (params_abs, cache_abs, ins["tokens"],
+                        ins["cur_pos"]), axes

@@ -1,0 +1,5 @@
+"""Workload model zoo: the intelligence applications ACE hosts."""
+from repro.models.model import LM
+from repro.models.cnn import Classifier
+
+__all__ = ["LM", "Classifier"]

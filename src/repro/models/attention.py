@@ -1,0 +1,530 @@
+"""Attention mixers: GQA (optionally sliding-window, qk-norm) and MLA.
+
+Full-sequence attention uses a blockwise streaming-softmax formulation
+(flash-attention semantics) so that S x S score matrices are never
+materialized — required for ``prefill_32k`` to fit. On TPU the inner loop is
+replaced by the Pallas kernel (``repro.kernels``); this jnp version is the
+oracle and the CPU/dry-run path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.models import param as P
+from repro.models.layers import norm_only, rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash) attention core
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, q_pos, k_pos, *, window: Optional[int],
+                        scale: float, kv_chunk: int = 1024):
+    """Causal (optionally windowed) attention with streaming softmax.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); q_pos: (B, Sq); k_pos: (B, Sk).
+    KV positions < 0 mark empty cache slots. H % KV == 0 (GQA groups).
+    Returns (B, Sq, H, hd).
+
+    Flash-attention memory semantics in BOTH directions: forward keeps only
+    the (m, l) streaming stats; backward (custom_vjp) recomputes the score
+    chunks instead of saving per-chunk softmax tensors — without this, the
+    scan's default vjp stashes O(S * chunk) f32 intermediates per layer and
+    the train_4k dry-runs blow past HBM.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    if (window is not None and sq == sk and sk >= 4 * window
+            and sq % _band_qchunk(window) == 0):
+        # banded path: O(S*window) instead of O(S^2) flops/HBM — the
+        # kv-chunk scan below cannot skip fully-masked chunks (§Perf B1)
+        out = _banded(qg, k, v, q_pos, k_pos, window, scale)
+    else:
+        out = _flash(qg, k, v, q_pos, k_pos, window, scale,
+                     min(kv_chunk, k.shape[1]))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _band_qchunk(window: int) -> int:
+    return min(window, 512)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _banded(qg, k, v, q_pos, k_pos, window, scale):
+    out, _ = _banded_fwd_impl(qg, k, v, q_pos, k_pos, window, scale)
+    return out
+
+
+def _banded_chunks(qg, k, v, q_pos, k_pos, window):
+    """Per-q-chunk views plus the KV band start index for each chunk."""
+    b, sq, kvh, g, hd = qg.shape
+    cq = _band_qchunk(window)
+    nq = sq // cq
+    band = window + cq           # covers [first_q - window + 1, last_q]
+    starts = jnp.maximum(jnp.arange(nq) * cq + cq - band, 0)  # clamp at 0
+    return cq, nq, band, starts
+
+
+def _banded_fwd_impl(qg, k, v, q_pos, k_pos, window, scale):
+    b, sq, kvh, g, hd = qg.shape
+    cq, nq, band, starts = _banded_chunks(qg, k, v, q_pos, k_pos, window)
+    qc = jnp.moveaxis(qg.reshape(b, nq, cq, kvh, g, hd), 1, 0)
+    qpc = jnp.moveaxis(q_pos.reshape(b, nq, cq), 1, 0)
+
+    def one(args):
+        qb, qpb, start = args
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        pb = jax.lax.dynamic_slice_in_dim(k_pos, start, band, axis=1)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        valid = (pb[:, None, :] <= qpb[:, :, None]) & (pb[:, None, :] >= 0)
+        valid &= pb[:, None, :] > (qpb[:, :, None] - window)
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+                       preferred_element_type=jnp.float32)
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        return o.astype(qg.dtype), m + jnp.log(jnp.maximum(l, 1e-30))
+
+    outs, lses = jax.lax.map(one, (qc, qpc, starts))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, kvh, g, hd)
+    lse = jnp.moveaxis(lses, 0, 1).reshape(b, sq, kvh, g)
+    return out, lse
+
+
+def _banded_fwd(qg, k, v, q_pos, k_pos, window, scale):
+    out, lse = _banded_fwd_impl(qg, k, v, q_pos, k_pos, window, scale)
+    return out, (qg, k, v, q_pos, k_pos, out, lse)
+
+
+def _banded_bwd(window, scale, res, do):
+    qg, k, v, q_pos, k_pos, out, lse = res
+    b, sq, kvh, g, hd = qg.shape
+    sk = k.shape[1]
+    cq, nq, band, starts = _banded_chunks(qg, k, v, q_pos, k_pos, window)
+    do32 = do.astype(jnp.float32)
+    delta = jnp.sum(do32 * out.astype(jnp.float32), axis=-1)
+    qc = jnp.moveaxis(qg.reshape(b, nq, cq, kvh, g, hd), 1, 0)
+    qpc = jnp.moveaxis(q_pos.reshape(b, nq, cq), 1, 0)
+    doc = jnp.moveaxis(do32.reshape(b, nq, cq, kvh, g, hd), 1, 0)
+    lsec = jnp.moveaxis(lse.reshape(b, nq, cq, kvh, g), 1, 0)
+    dc = jnp.moveaxis(delta.reshape(b, nq, cq, kvh, g), 1, 0)
+
+    def step(carry, xs):
+        dk_acc, dv_acc = carry
+        qb, qpb, dob, lseb, db, start = xs
+        kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+        pb = jax.lax.dynamic_slice_in_dim(k_pos, start, band, axis=1)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        valid = (pb[:, None, :] <= qpb[:, :, None]) & (pb[:, None, :] >= 0)
+        valid &= pb[:, None, :] > (qpb[:, :, None] - window)
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lseb[..., None])
+        dv_c = jnp.einsum("bqkgc,bqkgd->bckd", p, dob)
+        dp = jnp.einsum("bqkgd,bckd->bqkgc", dob, vb.astype(jnp.float32))
+        ds = p * (dp - db[..., None]) * scale
+        dq_c = jnp.einsum("bqkgc,bckd->bqkgd", ds, kb.astype(jnp.float32))
+        dk_c = jnp.einsum("bqkgc,bqkgd->bckd", ds, qb.astype(jnp.float32))
+        dk_acc = jax.lax.dynamic_update_slice_in_dim(
+            dk_acc, jax.lax.dynamic_slice_in_dim(dk_acc, start, band, 1)
+            + dk_c, start, axis=1)
+        dv_acc = jax.lax.dynamic_update_slice_in_dim(
+            dv_acc, jax.lax.dynamic_slice_in_dim(dv_acc, start, band, 1)
+            + dv_c, start, axis=1)
+        return (dk_acc, dv_acc), dq_c
+
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(step, (dk0, dv0),
+                                 (qc, qpc, doc, lsec, dc, starts))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, sq, kvh, g, hd)
+    return (dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+_banded.defvjp(_banded_fwd, _banded_bwd)
+
+
+def _chunked(k, v, k_pos, kv_chunk: int):
+    b = k.shape[0]
+    sk, kv, hd = k.shape[1], k.shape[2], k.shape[3]
+    nchunks = -(-sk // kv_chunk)
+    pad = nchunks * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kc = jnp.moveaxis(k.reshape(b, nchunks, kv_chunk, kv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nchunks, kv_chunk, kv, hd), 1, 0)
+    pc = jnp.moveaxis(k_pos.reshape(b, nchunks, kv_chunk), 1, 0)
+    return kc, vc, pc, pad
+
+
+def _mask(pb, q_pos, window):
+    valid = (pb[:, None, :] <= q_pos[:, :, None]) & (pb[:, None, :] >= 0)
+    if window is not None:
+        valid &= pb[:, None, :] > (q_pos[:, :, None] - window)
+    return valid[:, :, None, None, :]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _flash(qg, k, v, q_pos, k_pos, window, scale, kv_chunk):
+    out, _ = _flash_fwd_impl(qg, k, v, q_pos, k_pos, window, scale, kv_chunk)
+    return out
+
+
+def _flash_fwd_impl(qg, k, v, q_pos, k_pos, window, scale, kv_chunk):
+    b, sq, kv, g, hd = qg.shape
+    kc, vc, pc, _ = _chunked(k, v, k_pos, kv_chunk)
+
+    def step(carry, inputs):
+        acc, m, l = carry
+        kb, vb, pb = inputs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_mask(pb, q_pos, window), s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, sq, kv, g, hd), jnp.float32)
+    m0 = jnp.full((b, sq, kv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, g), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kc, vc, pc))
+    lsafe = jnp.maximum(l, 1e-30)
+    out = (acc / lsafe[..., None]).astype(qg.dtype)
+    lse = m + jnp.log(lsafe)                      # (B, Sq, KV, G)
+    return out, lse
+
+
+def _flash_fwd(qg, k, v, q_pos, k_pos, window, scale, kv_chunk):
+    out, lse = _flash_fwd_impl(qg, k, v, q_pos, k_pos, window, scale,
+                               kv_chunk)
+    return out, (qg, k, v, q_pos, k_pos, out, lse)
+
+
+def _flash_bwd(window, scale, kv_chunk, res, do):
+    qg, k, v, q_pos, k_pos, out, lse = res
+    b, sq, kv, g, hd = qg.shape
+    sk = k.shape[1]
+    kc, vc, pc, pad = _chunked(k, v, k_pos, kv_chunk)
+    do32 = do.astype(jnp.float32)
+    delta = jnp.sum(do32 * out.astype(jnp.float32), axis=-1)  # (B,Sq,KV,G)
+
+    def step(dq, inputs):
+        kb, vb, pb = inputs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_mask(pb, q_pos, window), s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                        # (B,Sq,KV,G,C)
+        dv_c = jnp.einsum("bqkgc,bqkgd->bckd", p, do32)
+        dp = jnp.einsum("bqkgd,bckd->bqkgc", do32,
+                        vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bqkgc,bckd->bqkgd", ds,
+                             kb.astype(jnp.float32))
+        dk_c = jnp.einsum("bqkgc,bqkgd->bckd", ds,
+                          qg.astype(jnp.float32))
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, sq, kv, g, hd), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kc, vc, pc))
+    nchunks = dk_c.shape[0]
+    dk = jnp.moveaxis(dk_c, 0, 1).reshape(b, nchunks * kv_chunk, kv, hd)
+    dv = jnp.moveaxis(dv_c, 0, 1).reshape(b, nchunks * kv_chunk, kv, hd)
+    if pad:
+        dk, dv = dk[:, :sk], dv[:, :sk]
+    return (dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(q, k, v, q_pos, k_pos, *, window: Optional[int],
+                     scale: float):
+    """Single-step attention: q (B, 1, H, hd) against the whole cache."""
+    b, _, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (k_pos <= q_pos[:, None]) & (k_pos >= 0)
+    if window is not None:
+        valid &= k_pos > (q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, width: int, kv_heads: int, head_dim: int,
+                  dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, width, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, width, kv_heads, head_dim), dtype),
+        "pos": jnp.full((batch, width), -1, jnp.int32),
+    }
+
+
+def cache_write(cache: dict, k1, v1, cur_pos) -> dict:
+    """Write one step (B, 1, KV, hd) at ring slot ``cur_pos % width``."""
+    width = cache["k"].shape[1]
+    slot = jnp.asarray(cur_pos, jnp.int32) % width
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1, slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32),
+                                       (cache["pos"].shape[0], 1)),
+        slot, axis=1)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def cache_fill(cache: dict, k, v, seq_len: int) -> dict:
+    """Populate a cache from prefill outputs k, v: (B, S, KV, hd)."""
+    width = cache["k"].shape[1]
+    b, s = k.shape[0], k.shape[1]
+    if s >= width:
+        # keep the trailing ``width`` positions, ring-ordered by t % width
+        t = jnp.arange(s - width, s)
+        slots = t % width
+        kw = jnp.zeros_like(cache["k"]).at[:, slots].set(k[:, s - width:])
+        vw = jnp.zeros_like(cache["v"]).at[:, slots].set(v[:, s - width:])
+        pos = jnp.full((b, width), -1, jnp.int32).at[:, slots].set(t[None, :])
+    else:
+        kw = cache["k"].at[:, :s].set(k)
+        vw = cache["v"].at[:, :s].set(v)
+        pos = cache["pos"].at[:, :s].set(jnp.arange(s)[None, :])
+    return {"k": kw, "v": vw, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    params = {
+        "wq": P.box(P.lecun(k1, (d, h, hd), dtype, d), (P.EMBED, P.HEADS, P.HEAD_DIM)),
+        "wk": P.box(P.lecun(k2, (d, kv, hd), dtype, d), (P.EMBED, P.KV_HEADS, P.HEAD_DIM)),
+        "wv": P.box(P.lecun(k3, (d, kv, hd), dtype, d), (P.EMBED, P.KV_HEADS, P.HEAD_DIM)),
+        "wo": P.box(P.lecun(k4, (h, hd, d), dtype, h * hd), (P.HEADS, P.HEAD_DIM, P.EMBED_OUT)),
+    }
+    if cfg.use_qk_norm:
+        params["q_scale"] = P.box(P.zeros((hd,), jnp.float32), (P.HEAD_DIM,))
+        params["k_scale"] = P.box(P.zeros((hd,), jnp.float32), (P.HEAD_DIM,))
+    return params
+
+
+def _qkv(params, cfg, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.use_qk_norm:
+        q = norm_only(q, cfg.rms_eps) * (1.0 + params["q_scale"]).astype(q.dtype)
+        k = norm_only(k, cfg.rms_eps) * (1.0 + params["k_scale"]).astype(k.dtype)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(params, cfg, x, positions, *, window: Optional[int],
+                 kv_chunk: int = 1024):
+    """Full-sequence causal attention. x: (B, S, D); positions: (B, S)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    # attention wants full sequences and sharded heads — SEQ deliberately
+    # absent (under sequence parallelism the AG/RS boundary sits here)
+    q = sh.hint(q, (sh.BATCH, None, sh.HEADS, None))
+    k = sh.hint(k, (sh.BATCH, None, sh.KV, None))
+    scale = cfg.resolved_head_dim ** -0.5
+    out = blockwise_attention(q, k, v, positions, positions, window=window,
+                              scale=scale, kv_chunk=kv_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, (k, v)
+
+
+def attn_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int]):
+    """One-token decode. x: (B, 1, D); cache from ``init_kv_cache``."""
+    b = x.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b, 1))
+    q, k1, v1 = _qkv(params, cfg, x, positions)
+    cache = cache_write(cache, k1, v1, cur_pos)
+    out = decode_attention(q, cache["k"], cache["v"], positions[:, 0],
+                           cache["pos"], window=window,
+                           scale=cfg.resolved_head_dim ** -0.5)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, cache
+
+
+def attn_cache_spec(cfg, batch: int, seq_len: int, window: Optional[int],
+                    dtype):
+    width = min(seq_len, window) if window else seq_len
+    return init_kv_cache(batch, width, cfg.num_kv_heads,
+                         cfg.resolved_head_dim, dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(rng, cfg, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_dq": P.box(P.lecun(ks[0], (d, m.q_lora_rank), dtype, d), (P.EMBED, P.LORA)),
+        "q_norm": P.box(P.zeros((m.q_lora_rank,), jnp.float32), (P.LORA,)),
+        "w_uq": P.box(P.lecun(ks[1], (m.q_lora_rank, h, qk), dtype, m.q_lora_rank),
+                      (P.LORA, P.HEADS, P.HEAD_DIM)),
+        "w_dkv": P.box(P.lecun(ks[2], (d, m.kv_lora_rank), dtype, d), (P.EMBED, P.LORA)),
+        "kv_norm": P.box(P.zeros((m.kv_lora_rank,), jnp.float32), (P.LORA,)),
+        "w_krope": P.box(P.lecun(ks[3], (d, m.qk_rope_head_dim), dtype, d),
+                         (P.EMBED, P.HEAD_DIM)),
+        "w_uk": P.box(P.lecun(ks[4], (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                              dtype, m.kv_lora_rank), (P.LORA, P.HEADS, P.HEAD_DIM)),
+        "w_uv": P.box(P.lecun(ks[5], (m.kv_lora_rank, h, m.v_head_dim),
+                              dtype, m.kv_lora_rank), (P.LORA, P.HEADS, P.HEAD_DIM)),
+        "wo": P.box(P.lecun(ks[6], (h, m.v_head_dim, d), dtype, h * m.v_head_dim),
+                    (P.HEADS, P.HEAD_DIM, P.EMBED_OUT)),
+    }
+
+
+def _mla_q(params, cfg, x, positions):
+    from repro.models.layers import rmsnorm
+    m = cfg.mla
+    cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+    cq = rmsnorm({"scale": params["q_norm"]}, cq, cfg.rms_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    q = sh.hint(q, (sh.BATCH, None, sh.HEADS, None))
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(params, cfg, x, positions):
+    from repro.models.layers import rmsnorm
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    ckv = rmsnorm({"scale": params["kv_norm"]}, ckv, cfg.rms_eps)
+    krope = jnp.einsum("bsd,dk->bsk", x, params["w_krope"])
+    krope = rope(krope, positions, cfg.rope_theta)
+    return ckv, krope
+
+
+def mla_forward(params, cfg, x, positions, *, window: Optional[int],
+                kv_chunk: int = 1024):
+    """Expanded-form MLA for train/prefill (heads sharded)."""
+    m = cfg.mla
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    ckv, krope = _mla_kv_latent(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uv"])
+    k_nope = sh.hint(k_nope, (sh.BATCH, None, sh.HEADS, None))
+    v = sh.hint(v, (sh.BATCH, None, sh.HEADS, None))
+    h = cfg.num_heads
+    k_rope_b = jnp.broadcast_to(krope[:, :, None, :],
+                                krope.shape[:2] + (h, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    # pad v to qk dim so the blockwise core can share shapes
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk - m.v_head_dim)))
+    scale = qk ** -0.5
+    out = blockwise_attention(q, k, vpad, positions, positions, window=window,
+                              scale=scale, kv_chunk=kv_chunk)
+    out = out[..., :m.v_head_dim]
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, (ckv, krope)
+
+
+def init_mla_cache(cfg, batch: int, width: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, width, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, width, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, width), -1, jnp.int32),
+    }
+
+
+def mla_cache_fill(cache: dict, ckv, krope, seq_len: int) -> dict:
+    width = cache["ckv"].shape[1]
+    b, s = ckv.shape[0], ckv.shape[1]
+    if s >= width:
+        t = jnp.arange(s - width, s)
+        slots = t % width
+        ckw = jnp.zeros_like(cache["ckv"]).at[:, slots].set(ckv[:, s - width:])
+        krw = jnp.zeros_like(cache["krope"]).at[:, slots].set(krope[:, s - width:])
+        pos = jnp.full((b, width), -1, jnp.int32).at[:, slots].set(t[None, :])
+    else:
+        ckw = cache["ckv"].at[:, :s].set(ckv)
+        krw = cache["krope"].at[:, :s].set(krope)
+        pos = cache["pos"].at[:, :s].set(jnp.arange(s)[None, :])
+    return {"ckv": ckw, "krope": krw, "pos": pos}
+
+
+def mla_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int]):
+    """Absorbed-form MLA decode: score/value math in the latent space, so the
+    cache stays compressed (kv_lora + rope dims) — the paper-relevant memory
+    saving of MLA."""
+    m = cfg.mla
+    b = x.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b, 1))
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)          # (B,1,H,*)
+    ckv1, krope1 = _mla_kv_latent(params, cfg, x, positions)    # (B,1,r)
+    # ring-write
+    width = cache["ckv"].shape[1]
+    slot = jnp.asarray(cur_pos, jnp.int32) % width
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv1, slot, 1),
+        "krope": jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope1, slot, 1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b, 1)),
+            slot, 1),
+    }
+    # absorb W_uk into q: q_lat (B,H,r)
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["w_uk"])
+    s_nope = jnp.einsum("bhr,bcr->bhc", q_lat,
+                        cache["ckv"].astype(q_lat.dtype),
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bhk,bck->bhc", q_rope[:, 0],
+                        cache["krope"].astype(q_rope.dtype),
+                        preferred_element_type=jnp.float32)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    s = (s_nope + s_rope) * (qk ** -0.5)
+    valid = (cache["pos"] <= positions) & (cache["pos"] >= 0)
+    if window is not None:
+        valid &= cache["pos"] > (positions - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhc,bcr->bhr", p.astype(cache["ckv"].dtype),
+                       cache["ckv"], preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhr,rhk->bhk", o_lat.astype(x.dtype), params["w_uv"])
+    y = jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None, :]
+    return y, cache

@@ -1,0 +1,108 @@
+"""Compact conv classifiers for the ACE video-query application (paper §5).
+
+EOC (edge object classifier, MobileNetV2 role) and COC (cloud object
+classifier, ResNet152 role) — the capacity *ratio* matters to the cascade,
+not the exact backbones (DESIGN.md §2). Residual conv stages, global average
+pooling, softmax head. Pure functional JAX, init returns (params, axes).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.ace_video_query import ClassifierConfig
+from repro.models import param as P
+
+
+def _conv_init(rng, cin: int, cout: int, ksize: int, dtype):
+    fan_in = cin * ksize * ksize
+    return P.box(P.lecun(rng, (ksize, ksize, cin, cout), dtype, fan_in),
+                 (None, None, None, P.MLP))
+
+
+def _conv(params, x, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, params, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn(x, scale, bias, groups: int = 8, eps: float = 1e-5):
+    """GroupNorm (batch-size independent — edge batches are tiny)."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, h, w, g, c // g).astype(jnp.float32)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    out = xg.reshape(b, h, w, c) * (1.0 + scale) + bias
+    return out.astype(x.dtype)
+
+
+class Classifier:
+    def __init__(self, cfg: ClassifierConfig, dtype=jnp.float32):
+        self.cfg = cfg
+        self.dtype = dtype
+
+    def init_boxed(self, rng):
+        cfg = self.cfg
+        dtype = self.dtype
+        keys = jax.random.split(rng, 2 + len(cfg.widths) * (1 + 2 * cfg.num_blocks_per_stage))
+        ki = iter(keys)
+        p = {"stem": _conv_init(next(ki), 3, cfg.widths[0], 3, dtype),
+             "stem_scale": P.box(P.zeros((cfg.widths[0],), jnp.float32), (None,)),
+             "stem_bias": P.box(P.zeros((cfg.widths[0],), jnp.float32), (None,))}
+        stages = []
+        cin = cfg.widths[0]
+        for w in cfg.widths:
+            stage = {"down": _conv_init(next(ki), cin, w, 3, dtype),
+                     "down_scale": P.box(P.zeros((w,), jnp.float32), (None,)),
+                     "down_bias": P.box(P.zeros((w,), jnp.float32), (None,)),
+                     "blocks": []}
+            for _ in range(cfg.num_blocks_per_stage):
+                stage["blocks"].append({
+                    "c1": _conv_init(next(ki), w, w, 3, dtype),
+                    "s1": P.box(P.zeros((w,), jnp.float32), (None,)),
+                    "b1": P.box(P.zeros((w,), jnp.float32), (None,)),
+                    "c2": _conv_init(next(ki), w, w, 3, dtype),
+                    "s2": P.box(P.zeros((w,), jnp.float32), (None,)),
+                    "b2": P.box(P.zeros((w,), jnp.float32), (None,)),
+                })
+            stages.append(stage)
+            cin = w
+        p["stages"] = stages
+        p["head"] = P.box(P.lecun(next(ki), (cin, cfg.num_classes), dtype, cin),
+                          (None, None))
+        p["head_bias"] = P.box(P.zeros((cfg.num_classes,), jnp.float32), (None,))
+        return p
+
+    def init(self, rng):
+        return P.unbox(self.init_boxed(rng))
+
+    def apply(self, params, images):
+        """images: (B, H, W, 3) in [0, 1] -> logits (B, num_classes)."""
+        x = _conv(params["stem"], images.astype(self.dtype))
+        x = jax.nn.relu(_gn(x, params["stem_scale"], params["stem_bias"]))
+        for stage in params["stages"]:
+            x = _conv(stage["down"], x, stride=2)
+            x = jax.nn.relu(_gn(x, stage["down_scale"], stage["down_bias"]))
+            for blk in stage["blocks"]:
+                h = jax.nn.relu(_gn(_conv(blk["c1"], x), blk["s1"], blk["b1"]))
+                h = _gn(_conv(blk["c2"], h), blk["s2"], blk["b2"])
+                x = jax.nn.relu(x + h)
+        x = jnp.mean(x, axis=(1, 2))
+        logits = x @ params["head"] + params["head_bias"]
+        return logits
+
+    def predict(self, params, images) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (confidence of argmax, argmax class)."""
+        probs = jax.nn.softmax(self.apply(params, images), axis=-1)
+        return jnp.max(probs, axis=-1), jnp.argmax(probs, axis=-1)
+
+    def loss(self, params, images, labels):
+        logits = self.apply(params, images)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return jnp.mean(nll), {"acc": acc}

@@ -1,0 +1,55 @@
+"""Modality-frontend stubs (the one allowed carve-out, see DESIGN.md §5).
+
+For VLM archs the InternViT vision tower is stubbed: we generate patch
+embeddings with the correct shape/dtype contract ``(B, P, embed_dim)``. For
+audio archs the EnCodec conv codec is stubbed: the LM consumes the
+``(B, S, num_codebooks)`` token grid directly. The projector / codebook
+embeddings that *consume* these are fully implemented in the LM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def synth_image_embeds(rng, cfg: ModelConfig, batch: int):
+    """Stubbed ViT output: unit-normalized patch embeddings."""
+    f = cfg.frontend
+    x = jax.random.normal(rng, (batch, f.num_prefix_tokens, f.embed_dim),
+                          jnp.float32)
+    x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x.astype(jnp.dtype(cfg.param_dtype))
+
+
+def synth_audio_tokens(rng, cfg: ModelConfig, batch: int, seq_len: int):
+    """Stubbed EnCodec output: token grid over ``num_codebooks`` streams."""
+    return jax.random.randint(
+        rng, (batch, seq_len, cfg.frontend.num_codebooks), 0, cfg.vocab_size,
+        dtype=jnp.int32)
+
+
+def make_batch(rng, cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """A synthetic training batch honouring the arch's input contract."""
+    k1, k2 = jax.random.split(rng)
+    if cfg.frontend.kind == "audio":
+        tokens = synth_audio_tokens(k1, cfg, batch, seq_len)
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full((batch, 1, tokens.shape[2]), -1,
+                                     jnp.int32)], axis=1)
+        return {"tokens": tokens, "labels": labels}
+    if cfg.frontend.kind == "vision":
+        n_txt = seq_len - cfg.frontend.num_prefix_tokens
+        assert n_txt > 0, "seq_len must exceed the vision prefix"
+        tokens = jax.random.randint(k1, (batch, n_txt), 0, cfg.vocab_size,
+                                    dtype=jnp.int32)
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full((batch, 1), -1, jnp.int32)], axis=1)
+        return {"tokens": tokens, "labels": labels,
+                "image_embeds": synth_image_embeds(k2, cfg, batch)}
+    tokens = jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((batch, 1), -1, jnp.int32)], axis=1)
+    return {"tokens": tokens, "labels": labels}

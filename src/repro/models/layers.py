@@ -1,0 +1,118 @@
+"""Core layers: RMSNorm, MLPs, embeddings, RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import param as P
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": P.box(P.zeros((d,), jnp.float32), (P.EMBED,))}
+
+
+def rmsnorm(params, x, eps: float):
+    """(1+scale) RMSNorm computed in f32 (Gemma-style zero-centred scale)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"].astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def norm_only(x, eps: float):
+    """Scale-free RMS normalization (used by qk-norm variants w/o params)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(rng, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": P.box(P.lecun(k1, (d_model, d_ff), dtype, d_model), (P.EMBED, P.MLP)),
+        "w_up": P.box(P.lecun(k2, (d_model, d_ff), dtype, d_model), (P.EMBED, P.MLP)),
+        "w_down": P.box(P.lecun(k3, (d_ff, d_model), dtype, d_ff), (P.MLP, P.EMBED_OUT)),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def gelu_mlp_init(rng, d_model: int, d_ff: int, dtype) -> dict:
+    # GeGLU (gated GELU) — used by recurrentgemma / starcoder2 / musicgen.
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": P.box(P.lecun(k1, (d_model, d_ff), dtype, d_model), (P.EMBED, P.MLP)),
+        "w_up": P.box(P.lecun(k2, (d_model, d_ff), dtype, d_model), (P.EMBED, P.MLP)),
+        "w_down": P.box(P.lecun(k3, (d_ff, d_model), dtype, d_ff), (P.MLP, P.EMBED_OUT)),
+    }
+
+
+def gelu_mlp(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(rng, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": P.box(P.normal(rng, (vocab, d_model), dtype, 1.0),
+                           (P.VOCAB, P.EMBED))}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(table, x):
+    """x (..., D) @ table^T (V, D) -> (..., V) logits."""
+    return jnp.einsum("...d,vd->...v", x, table)
+
+
+def unembed_init(rng, vocab: int, d_model: int, dtype) -> dict:
+    return {"table": P.box(P.normal(rng, (vocab, d_model), dtype,
+                                    d_model ** -0.5), (P.VOCAB, P.EMBED))}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """Apply RoPE. x: (..., S, H, hd) or (..., S, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    if x.ndim == angles.ndim + 1:          # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits, cap: float):
+    """Gemma-style logit soft-capping; no-op when cap == 0."""
+    if cap and cap > 0:
+        return (cap * jnp.tanh(logits.astype(jnp.float32) / cap)).astype(logits.dtype)
+    return logits

@@ -1,0 +1,464 @@
+"""The LM assembly: stages of scanned blocks, train/prefill/decode entry
+points, cache management.
+
+Layers are scanned (``jax.lax.scan`` over stacked per-layer params) so the
+lowered HLO stays small for the 512-device dry-run, and rematerialized
+(``jax.checkpoint``) in training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.configs.base import (ATTN, GELU_MLP, MLA, MLSTM, MOE, NONE, RGLRU,
+                                SLSTM, SWIGLU, BlockDef, ModelConfig, Stage)
+from repro.models import attention as att
+from repro.models import moe as moe_lib
+from repro.models import param as P
+from repro.models import recurrent as rec
+from repro.models.layers import (embed, embedding_init, gelu_mlp,
+                                 gelu_mlp_init, rmsnorm, rmsnorm_init,
+                                 softcap, swiglu, swiglu_init, unembed,
+                                 unembed_init)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / forward / decode
+# ---------------------------------------------------------------------------
+
+def _block_init(rng, bdef: BlockDef, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(rng, 4)
+    p: Params = {}
+    if bdef.mixer == ATTN:
+        p["norm1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mixer"] = att.attn_init(ks[0], cfg, dtype)
+    elif bdef.mixer == MLA:
+        p["norm1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mixer"] = att.mla_init(ks[0], cfg, dtype)
+    elif bdef.mixer == RGLRU:
+        p["norm1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mixer"] = rec.rglru_block_init(ks[0], cfg, dtype)
+    elif bdef.mixer == MLSTM:
+        p["mixer"] = rec.mlstm_block_init(ks[0], cfg, dtype)
+    elif bdef.mixer == SLSTM:
+        p["mixer"] = rec.slstm_block_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(bdef.mixer)
+    if bdef.mlp != NONE:
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        if bdef.mlp == SWIGLU:
+            p["mlp"] = swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        elif bdef.mlp == GELU_MLP:
+            p["mlp"] = gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        elif bdef.mlp == MOE:
+            p["mlp"] = moe_lib.moe_init(ks[1], cfg, dtype)
+        else:
+            raise ValueError(bdef.mlp)
+    return p
+
+
+def _mlp_apply(bdef: BlockDef, params, cfg, x, capacity_factor: float):
+    if bdef.mlp == NONE:
+        return x, jnp.zeros((), jnp.float32)
+    h = rmsnorm(params["norm2"], x, cfg.rms_eps)
+    if bdef.mlp == SWIGLU:
+        return x + swiglu(params["mlp"], h), jnp.zeros((), jnp.float32)
+    if bdef.mlp == GELU_MLP:
+        return x + gelu_mlp(params["mlp"], h), jnp.zeros((), jnp.float32)
+    y, aux = moe_lib.moe_forward(params["mlp"], cfg, h,
+                                 capacity_factor=capacity_factor)
+    return x + y, aux
+
+
+def _block_forward(bdef: BlockDef, params, cfg, x, positions, *,
+                   want_cache: bool, cache_width: Optional[int],
+                   kv_chunk: int, capacity_factor: float):
+    """Full-sequence block. Returns (x, cache_or_None, aux)."""
+    b = x.shape[0]
+    cache = None
+    if bdef.mixer == ATTN:
+        h = rmsnorm(params["norm1"], x, cfg.rms_eps)
+        y, (k, v) = att.attn_forward(params["mixer"], cfg, h, positions,
+                                     window=bdef.window, kv_chunk=kv_chunk)
+        x = x + y
+        if want_cache:
+            width = _attn_width(bdef, cache_width)
+            cache = att.init_kv_cache(b, width, cfg.num_kv_heads,
+                                      cfg.resolved_head_dim, k.dtype)
+            cache = att.cache_fill(cache, k, v, x.shape[1])
+    elif bdef.mixer == MLA:
+        h = rmsnorm(params["norm1"], x, cfg.rms_eps)
+        y, (ckv, krope) = att.mla_forward(params["mixer"], cfg, h, positions,
+                                          window=bdef.window, kv_chunk=kv_chunk)
+        x = x + y
+        if want_cache:
+            width = _attn_width(bdef, cache_width)
+            cache = att.init_mla_cache(cfg, b, width, ckv.dtype)
+            cache = att.mla_cache_fill(cache, ckv, krope, x.shape[1])
+    elif bdef.mixer == RGLRU:
+        h = rmsnorm(params["norm1"], x, cfg.rms_eps)
+        y, state = rec.rglru_block_forward(params["mixer"], cfg, h)
+        x = x + y
+        cache = state if want_cache else None
+    elif bdef.mixer == MLSTM:
+        y, state = rec.mlstm_block_forward(params["mixer"], cfg, x)
+        x = x + y
+        cache = state if want_cache else None
+    elif bdef.mixer == SLSTM:
+        y, state = rec.slstm_block_forward(params["mixer"], cfg, x)
+        x = x + y
+        cache = state if want_cache else None
+    else:
+        raise ValueError(bdef.mixer)
+    x, aux = _mlp_apply(bdef, params, cfg, x, capacity_factor)
+    return x, cache, aux
+
+
+def _block_decode(bdef: BlockDef, params, cfg, x1, cache, cur_pos, *,
+                  capacity_factor: float):
+    if bdef.mixer == ATTN:
+        h = rmsnorm(params["norm1"], x1, cfg.rms_eps)
+        y, cache = att.attn_decode(params["mixer"], cfg, h, cache, cur_pos,
+                                   window=bdef.window)
+        x1 = x1 + y
+    elif bdef.mixer == MLA:
+        h = rmsnorm(params["norm1"], x1, cfg.rms_eps)
+        y, cache = att.mla_decode(params["mixer"], cfg, h, cache, cur_pos,
+                                  window=bdef.window)
+        x1 = x1 + y
+    elif bdef.mixer == RGLRU:
+        h = rmsnorm(params["norm1"], x1, cfg.rms_eps)
+        y, cache = rec.rglru_block_decode(params["mixer"], cfg, h, cache)
+        x1 = x1 + y
+    elif bdef.mixer == MLSTM:
+        y, cache = rec.mlstm_block_decode(params["mixer"], cfg, x1, cache)
+        x1 = x1 + y
+    elif bdef.mixer == SLSTM:
+        y, cache = rec.slstm_block_decode(params["mixer"], cfg, x1, cache)
+        x1 = x1 + y
+    else:
+        raise ValueError(bdef.mixer)
+    x1, _ = _mlp_apply(bdef, params, cfg, x1, capacity_factor)
+    return x1, cache
+
+
+def _attn_width(bdef: BlockDef, cache_width: Optional[int]) -> int:
+    assert cache_width is not None
+    return min(cache_width, bdef.window) if bdef.window else cache_width
+
+
+def _block_cache_spec(bdef: BlockDef, cfg, batch: int,
+                      cache_width: int, dtype):
+    if bdef.mixer == ATTN:
+        return att.attn_cache_spec(cfg, batch, cache_width, bdef.window, dtype)
+    if bdef.mixer == MLA:
+        width = _attn_width(bdef, cache_width)
+        return att.init_mla_cache(cfg, batch, width, dtype)
+    if bdef.mixer == RGLRU:
+        return rec.rglru_state_spec(cfg, batch, dtype)
+    if bdef.mixer == MLSTM:
+        return rec.mlstm_state_init(batch, cfg.num_heads, cfg.resolved_head_dim)
+    if bdef.mixer == SLSTM:
+        return rec.slstm_state_init(batch, cfg.num_heads, cfg.resolved_head_dim)
+    raise ValueError(bdef.mixer)
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+    kv_chunk: int = 512
+    capacity_factor: float = 1.25
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.param_dtype)
+
+    # -- init ---------------------------------------------------------------
+    def init_boxed(self, rng) -> Params:
+        cfg = self.cfg
+        dtype = self.dtype
+        n_stages = len(cfg.stages)
+        keys = jax.random.split(rng, n_stages + 4)
+        p: Params = {}
+        if cfg.frontend.kind == "audio":
+            nb = cfg.frontend.num_codebooks
+            tbls = jax.random.split(keys[0], nb)
+            tables = jnp.stack([
+                P.normal(k, (cfg.padded_vocab, cfg.d_model), dtype, 1.0)
+                for k in tbls])
+            p["embed"] = {"table": P.box(tables, (None, P.VOCAB, P.EMBED))}
+        else:
+            p["embed"] = embedding_init(keys[0], cfg.padded_vocab,
+                                        cfg.d_model, dtype)
+        if cfg.frontend.kind == "vision":
+            k1, k2 = jax.random.split(keys[1])
+            e = cfg.frontend.embed_dim
+            p["vision_proj"] = {
+                "w1": P.box(P.lecun(k1, (e, cfg.d_model), dtype, e),
+                            (None, P.EMBED)),
+                "w2": P.box(P.lecun(k2, (cfg.d_model, cfg.d_model), dtype,
+                                    cfg.d_model), (P.EMBED, P.EMBED)),
+            }
+        stages = []
+        for si, stage in enumerate(cfg.stages):
+            stage_keys = jax.random.split(keys[2 + si], stage.repeat)
+
+            def one_layer(k, _stage=stage):
+                bk = jax.random.split(k, len(_stage.blocks))
+                return {f"b{i}": _block_init(bk[i], bdef, cfg, dtype)
+                        for i, bdef in enumerate(_stage.blocks)}
+
+            layer_p = jax.vmap(one_layer)(stage_keys)
+            # vmap strips Boxed axes metadata -> rebuild with STACK prefix
+            proto = jax.eval_shape(one_layer, stage_keys[0])
+            _, axes = P.unbox(proto)
+            layer_v, _ = P.unbox(layer_p)
+            layer_boxed = jax.tree.map(
+                lambda v, ax: P.box(v, (P.STACK,) + tuple(ax)),
+                layer_v, axes)
+            stages.append(layer_boxed)
+        p["stages"] = stages
+        p["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            if cfg.frontend.kind == "audio":
+                nb = cfg.frontend.num_codebooks
+                tbls = jax.random.split(keys[-2], nb)
+                tables = jnp.stack([
+                    P.normal(k, (cfg.padded_vocab, cfg.d_model), dtype,
+                             cfg.d_model ** -0.5) for k in tbls])
+                p["unembed"] = {"table": P.box(tables, (None, P.VOCAB, P.EMBED))}
+            else:
+                p["unembed"] = unembed_init(keys[-2], cfg.padded_vocab,
+                                            cfg.d_model, dtype)
+        if cfg.mtp_depth > 0:
+            k1, k2 = jax.random.split(keys[-1])
+            p["mtp"] = {
+                "proj": P.box(P.lecun(k1, (2 * cfg.d_model, cfg.d_model),
+                                      dtype, 2 * cfg.d_model),
+                              (P.EMBED, P.EMBED)),
+                "norm": rmsnorm_init(cfg.d_model, dtype),
+                "block": _block_init(
+                    k2, BlockDef(mixer=ATTN if cfg.mla is None else MLA,
+                                 mlp=SWIGLU), cfg, dtype),
+            }
+        return p
+
+    def init(self, rng) -> Tuple[Params, Params]:
+        """Returns (params, logical_axes) pytrees."""
+        return P.unbox(self.init_boxed(rng))
+
+    def abstract(self) -> Tuple[Params, Params]:
+        """(ShapeDtypeStruct params, logical axes) without allocating."""
+        boxed = jax.eval_shape(self.init_boxed, jax.random.PRNGKey(0))
+        return P.unbox(boxed)
+
+    # -- embedding ----------------------------------------------------------
+    def _embed_inputs(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.frontend.kind == "audio":
+            # tokens (B, S, num_codebooks); sum codebook embeddings
+            x = jnp.sum(jax.vmap(
+                lambda t, c: jnp.take(params["embed"]["table"][c], t, axis=0),
+                in_axes=(2, 0), out_axes=2,
+            )(tokens, jnp.arange(cfg.frontend.num_codebooks)), axis=2)
+        else:
+            x = embed(params["embed"], tokens)
+        if cfg.frontend.kind == "vision":
+            img = batch["image_embeds"]            # (B, P, E) stubbed ViT out
+            vp = params["vision_proj"]
+            h = jax.nn.gelu(jnp.einsum("bpe,ed->bpd", img, vp["w1"])
+                            .astype(jnp.float32), approximate=True)
+            img_tok = jnp.einsum("bpd,dk->bpk", h.astype(x.dtype), vp["w2"])
+            x = jnp.concatenate([img_tok, x], axis=1)
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return x, positions
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["unembed"]["table"])
+        if cfg.frontend.kind == "audio":
+            logits = jnp.einsum("bsd,cvd->bscv", x, table)
+        else:
+            logits = unembed(table, x)
+        if cfg.tie_embeddings:
+            # the tied table is unit-std (embedding-scaled); rescale for logits
+            logits = logits * (cfg.d_model ** -0.5)
+        logits = sh.hint(logits, (sh.BATCH, None, sh.VOCAB)
+                         if cfg.frontend.kind != "audio"
+                         else (sh.BATCH, None, None, sh.VOCAB))
+        return softcap(logits, cfg.logit_softcap)
+
+    # -- full-sequence forward ---------------------------------------------
+    def forward(self, params, batch, *, want_cache: bool = False,
+                cache_width: Optional[int] = None, train: bool = False,
+                last_only: bool = False):
+        """Returns (logits, caches, aux_loss). ``last_only`` unembeds just
+        the final position (serving prefill — §Perf B2)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x = sh.hint(x, (sh.BATCH, sh.SEQ, None))
+        aux = jnp.zeros((), jnp.float32)
+        caches: List[Any] = []
+        for stage, stage_params in zip(cfg.stages, params["stages"]):
+            x, stage_caches, stage_aux = self._stage_forward(
+                stage, stage_params, x, positions,
+                want_cache=want_cache, cache_width=cache_width, train=train)
+            caches.append(stage_caches)
+            aux = aux + stage_aux
+        x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+        logits = self._logits(params, x[:, -1:] if last_only else x)
+        return logits, (caches if want_cache else None), aux, x
+
+    def _stage_forward(self, stage: Stage, stage_params, x, positions, *,
+                       want_cache: bool, cache_width: Optional[int],
+                       train: bool):
+        cfg = self.cfg
+
+        def body2(carry, layer_params):
+            h, aux = carry
+            layer_caches = []
+            for i, bdef in enumerate(stage.blocks):
+                h, cache, a = _block_forward(
+                    bdef, layer_params[f"b{i}"], cfg, h, positions,
+                    want_cache=want_cache, cache_width=cache_width,
+                    kv_chunk=self.kv_chunk,
+                    capacity_factor=self.capacity_factor)
+                aux = aux + a
+                h = sh.hint(h, (sh.BATCH, sh.SEQ, None))
+                layer_caches.append(cache)
+            ys = tuple(layer_caches) if want_cache else None
+            return (h, aux), ys
+
+        fn = jax.checkpoint(body2) if train else body2
+        (x, aux), caches = jax.lax.scan(
+            fn, (x, jnp.zeros((), jnp.float32)), stage_params)
+        return x, caches, aux
+
+    # -- decode -------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int):
+        """Stacked per-stage caches sized for a ``seq_len`` context."""
+        cfg = self.cfg
+        dtype = self.dtype
+        caches = []
+        for stage in cfg.stages:
+            specs = tuple(
+                _block_cache_spec(bdef, cfg, batch, seq_len, dtype)
+                for bdef in stage.blocks)
+            stacked = jax.tree.map(
+                lambda a: jnp.zeros((stage.repeat,) + a.shape, a.dtype), specs)
+            # position slots must start at -1 (empty), recurrent m at 0
+            stacked = jax.tree_util.tree_map_with_path(
+                lambda path, a: (jnp.full_like(a, -1)
+                                 if _path_endswith(path, "pos") else a),
+                stacked)
+            caches.append(stacked)
+        return caches
+
+    def decode_step(self, params, caches, tokens, cur_pos):
+        """One-token decode. tokens: (B, 1) (audio: (B, 1, C)).
+        Returns (logits (B, 1, V...), new caches)."""
+        cfg = self.cfg
+        batch = {"tokens": tokens}
+        if cfg.frontend.kind == "vision":
+            # decode consumes plain text tokens; vision prefix lives in cache
+            x = embed(params["embed"], tokens)
+        else:
+            x, _ = self._embed_inputs(params, batch)
+        x = sh.hint(x, (sh.BATCH, sh.SEQ, None))
+        new_caches = []
+        for stage, stage_params, stage_cache in zip(
+                cfg.stages, params["stages"], caches):
+            def body(h, xs, _stage=stage):
+                layer_params, layer_cache = xs
+                new_layer = []
+                for i, bdef in enumerate(_stage.blocks):
+                    h, c = _block_decode(
+                        bdef, layer_params[f"b{i}"], cfg, h, layer_cache[i],
+                        cur_pos, capacity_factor=self.capacity_factor)
+                    new_layer.append(c)
+                return h, tuple(new_layer)
+
+            x, nc = jax.lax.scan(body, x, (stage_params, stage_cache))
+            new_caches.append(nc)
+        x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+        logits = self._logits(params, x)
+        return logits, new_caches
+
+    def prefill(self, params, batch, cache_width: int,
+                last_only: bool = False):
+        """Full forward that also returns populated caches."""
+        logits, caches, aux, _ = self.forward(
+            params, batch, want_cache=True, cache_width=cache_width,
+            last_only=last_only)
+        return logits, caches
+
+    # -- losses ---------------------------------------------------------------
+    def loss(self, params, batch, train: bool = True):
+        """Next-token cross entropy (+ MoE aux + optional MTP loss)."""
+        cfg = self.cfg
+        logits, _, aux, h_final = self.forward(params, batch, train=train)
+        labels = batch["labels"]
+        if cfg.frontend.kind == "vision":
+            # loss only over text positions (prefix is image tokens)
+            pad = cfg.frontend.num_prefix_tokens
+            logits_txt = logits[:, pad:]
+            ce = _xent(logits_txt, labels)
+        else:
+            ce = _xent(logits, labels)
+        total = ce + (cfg.moe.router_aux_loss * aux if cfg.moe else 0.0)
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp_depth > 0 and train:
+            mtp = self._mtp_loss(params, batch, h_final)
+            total = total + 0.1 * mtp
+            metrics["mtp"] = mtp
+        return total, metrics
+
+    def _mtp_loss(self, params, batch, h_final):
+        """DeepSeek-V3 multi-token prediction: depth-1 extra head predicting
+        token t+2 from [h_t ; embed(token_{t+1})]."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        if cfg.frontend.kind == "vision":
+            pad = cfg.frontend.num_prefix_tokens
+            h_final = h_final[:, pad:]
+        emb_next = embed(params["embed"], tokens[:, 1:])
+        h = jnp.concatenate([h_final[:, :-1], emb_next], axis=-1)
+        h = jnp.einsum("bsd,dk->bsk", h, params["mtp"]["proj"])
+        b, s = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        bdef = BlockDef(mixer=ATTN if cfg.mla is None else MLA, mlp=SWIGLU)
+        h, _, _ = _block_forward(bdef, params["mtp"]["block"], cfg, h,
+                                 positions, want_cache=False, cache_width=None,
+                                 kv_chunk=self.kv_chunk,
+                                 capacity_factor=self.capacity_factor)
+        h = rmsnorm(params["mtp"]["norm"], h, cfg.rms_eps)
+        logits = self._logits(params, h)
+        # positions t=0..S-2 predict token_{t+2} == labels[:, 1:]
+        return _xent(logits, labels[:, 1:])
+
+
+def _path_endswith(path, name: str) -> bool:
+    return len(path) > 0 and getattr(path[-1], "key", None) == name
+
+
+def _xent(logits, labels):
+    """Masked softmax cross entropy. labels < 0 are ignored."""
+    mask = (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, nll, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,84 @@
+"""Parameter boxing: every parameter carries logical axis names at init.
+
+Init functions build pytrees whose leaves are :class:`Boxed` (value + logical
+axes). ``unbox`` splits them into a value pytree and an axes pytree with the
+same structure; the launcher maps logical axes onto mesh axes (see
+``repro.launch.sharding``). This keeps model code free of mesh knowledge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Logical axis vocabulary (mapped to mesh axes in launch/sharding.py)
+EMBED = "embed"        # d_model (contraction-side)
+EMBED_OUT = "embed_out"  # d_model as an OUTPUT dim (w_down/wo); decode replicates it
+VOCAB = "vocab"
+HEADS = "heads"
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+MLP = "mlp"            # d_ff
+EXPERT = "expert"
+LRU = "lru"            # recurrent width
+LORA = "lora"          # MLA low-rank dims
+STACK = "stack"        # scan-stacked layer axis (never sharded)
+NULL = None
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Boxed:
+    value: jnp.ndarray
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def box(value, axes) -> Boxed:
+    assert len(axes) == value.ndim, (value.shape, axes)
+    return Boxed(value, tuple(axes))
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Split a Boxed tree into (values, axes) trees of identical structure."""
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return values, axes
+
+
+def stacked(axes_tree):
+    """Prefix every axes tuple with the scan STACK axis (after vmap-init)."""
+    return jax.tree.map(lambda ax: (STACK,) + tuple(ax),
+                        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal(rng, shape, dtype, stddev):
+    return (stddev * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+
+
+def lecun(rng, shape, dtype, fan_in):
+    return normal(rng, shape, dtype, fan_in ** -0.5)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)

@@ -1,0 +1,384 @@
+"""Recurrent temporal mixers: RG-LRU (RecurrentGemma/Griffin), sLSTM and
+mLSTM (xLSTM).
+
+Training paths are parallel where the math allows it (associative scan for
+RG-LRU, stabilized chunkwise form for mLSTM); sLSTM is inherently sequential
+(hidden-state feedback into the gates) and uses ``lax.scan`` over time, as in
+the xLSTM paper. Decode paths carry O(1) state — this is what makes these
+families natively sub-quadratic for ``long_500k``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import param as P
+from repro.models.layers import rmsnorm
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin): h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_block_init(rng, cfg, dtype) -> dict:
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    cw = cfg.rglru_conv_width
+    ks = jax.random.split(rng, 7)
+    # Lambda init so that a = exp(-c*softplus(L)) lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RGLRU_C))
+    return {
+        "w_in_x": P.box(P.lecun(ks[1], (d, w), dtype, d), (P.EMBED, P.LRU)),
+        "w_in_gate": P.box(P.lecun(ks[2], (d, w), dtype, d), (P.EMBED, P.LRU)),
+        "conv_w": P.box(P.normal(ks[3], (cw, w), dtype, cw ** -0.5), (None, P.LRU)),
+        "conv_b": P.box(P.zeros((w,), jnp.float32), (P.LRU,)),
+        "w_rgate": P.box(P.lecun(ks[4], (w, w), dtype, w), (P.LRU, P.LRU)),
+        "b_rgate": P.box(P.zeros((w,), jnp.float32), (P.LRU,)),
+        "w_igate": P.box(P.lecun(ks[5], (w, w), dtype, w), (P.LRU, P.LRU)),
+        "b_igate": P.box(P.zeros((w,), jnp.float32), (P.LRU,)),
+        "lam": P.box(lam, (P.LRU,)),
+        "w_out": P.box(P.lecun(ks[6], (w, d), dtype, w), (P.LRU, P.EMBED_OUT)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, W); w: (cw, W)."""
+    cw = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted.astype(jnp.float32) * w[cw - 1 - i].astype(jnp.float32)
+    return (out + b).astype(x.dtype)
+
+
+def _conv_step(x1, prev, w, b):
+    """One-step causal conv. x1: (B, 1, W); prev: (B, cw-1, W) past inputs."""
+    cw = w.shape[0]
+    buf = jnp.concatenate([prev, x1], axis=1)          # (B, cw, W)
+    out = jnp.einsum("bcw,cw->bw", buf.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b
+    return out.astype(x1.dtype)[:, None, :], buf[:, 1:]
+
+
+def _rglru_gates(params, xc):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, params["w_rgate"])
+                       .astype(jnp.float32) + params["b_rgate"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc, params["w_igate"])
+                       .astype(jnp.float32) + params["b_igate"])
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r   # (B,S,W) f32
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated_x = mult * i * xc.astype(jnp.float32)
+    return a, gated_x
+
+
+def rglru_scan_ref(a, bx, h0):
+    """Oracle linear recurrence h_t = a_t h_{t-1} + bx_t via associative scan.
+
+    a, bx: (B, S, W) f32; h0: (B, W). Returns (h_all (B,S,W), h_last)."""
+    # fold h0 into the first step
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block_forward(params, cfg, x, h0=None, conv0=None):
+    """Full-sequence Griffin recurrent block. x: (B, S, D)."""
+    b, s, _ = x.shape
+    w = cfg.resolved_lru_width
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_in_gate"])
+                       .astype(jnp.float32), approximate=True)
+    xin = jnp.einsum("bsd,dw->bsw", x, params["w_in_x"])
+    xc = _causal_conv(xin, params["conv_w"], params["conv_b"])
+    if conv0 is not None:  # resume from cached conv inputs (unused in train)
+        pass
+    a, bx = _rglru_gates(params, xc)
+    h0 = jnp.zeros((b, w), jnp.float32) if h0 is None else h0
+    h, h_last = rglru_scan_ref(a, bx, h0)
+    y = (h * gate).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+    cw = cfg.rglru_conv_width
+    conv_tail = xin[:, -(cw - 1):] if s >= cw - 1 else jnp.pad(
+        xin, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+    return out, {"h": h_last, "conv": conv_tail}
+
+
+def rglru_block_decode(params, cfg, x1, state) -> Tuple[jnp.ndarray, dict]:
+    """One-step decode. x1: (B, 1, D); state {'h': (B,W), 'conv': (B,cw-1,W)}."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x1, params["w_in_gate"])
+                       .astype(jnp.float32), approximate=True)
+    xin = jnp.einsum("bsd,dw->bsw", x1, params["w_in_x"])
+    xc, conv_buf = _conv_step(xin, state["conv"], params["conv_w"],
+                              params["conv_b"])
+    a, bx = _rglru_gates(params, xc)
+    h = a[:, 0] * state["h"] + bx[:, 0]
+    y = (h[:, None, :] * gate).astype(x1.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+    return out, {"h": h, "conv": conv_buf}
+
+
+def rglru_state_spec(cfg, batch: int, dtype) -> dict:
+    w = cfg.resolved_lru_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, w), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — stabilized
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(rng, cfg, dtype) -> dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 7)
+    return {
+        "norm": rmsnorm_init_(d),
+        "wq": P.box(P.lecun(ks[0], (d, h, hd), dtype, d), (P.EMBED, P.HEADS, P.HEAD_DIM)),
+        "wk": P.box(P.lecun(ks[1], (d, h, hd), dtype, d), (P.EMBED, P.HEADS, P.HEAD_DIM)),
+        "wv": P.box(P.lecun(ks[2], (d, h, hd), dtype, d), (P.EMBED, P.HEADS, P.HEAD_DIM)),
+        "w_if": P.box(P.lecun(ks[3], (d, h, 2), dtype, d), (P.EMBED, P.HEADS, None)),
+        "b_if": P.box(jnp.concatenate([jnp.zeros((h, 1)),
+                                       jnp.full((h, 1), 3.0)], -1).astype(jnp.float32),
+                      (P.HEADS, None)),
+        "w_ogate": P.box(P.lecun(ks[4], (d, h, hd), dtype, d), (P.EMBED, P.HEADS, P.HEAD_DIM)),
+        "gn_scale": P.box(P.zeros((h, hd), jnp.float32), (P.HEADS, P.HEAD_DIM)),
+        "w_out": P.box(P.lecun(ks[5], (h, hd, d), dtype, h * hd), (P.HEADS, P.HEAD_DIM, P.EMBED_OUT)),
+    }
+
+
+def rmsnorm_init_(d):
+    return {"scale": P.box(P.zeros((d,), jnp.float32), (P.EMBED,))}
+
+
+def _headnorm(x, scale, eps):
+    """Per-head RMS norm. x: (B, S, H, hd)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(dt)
+
+
+def mlstm_cell_ref(q, k, v, log_i, log_f, state=None):
+    """Sequential stabilized mLSTM (oracle + decode path).
+
+    q,k,v: (B, S, H, hd); log_i/log_f: (B, S, H) f32.
+    state: {'C': (B,H,hd,hd), 'n': (B,H,hd), 'm': (B,H)} or None.
+    Returns h: (B, S, H, hd) f32, final state.
+    """
+    b, s, h, hd = q.shape
+    if state is None:
+        state = mlstm_state_init(b, h, hd)
+    scale = hd ** -0.5
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)[..., None]
+        f_ = jnp.exp(lf + m - m_new)[..., None]
+        C_new = f_[..., None] * C + i_[..., None] * (vt[..., :, None] * kt[..., None, :])
+        n_new = f_ * n + i_ * kt
+        qs = qt * scale
+        num = jnp.einsum("bhvk,bhk->bhv", C_new, qs)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qs))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        ht = num / den[..., None]
+        return (C_new, n_new, m_new), ht
+
+    xs = (jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(log_i, 1, 0), jnp.moveaxis(log_f, 1, 0))
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    return jnp.moveaxis(hs, 0, 1), {"C": C, "n": n, "m": m}
+
+
+def mlstm_cell_chunkwise(q, k, v, log_i, log_f, state=None, chunk: int = 64):
+    """Stabilized chunkwise-parallel mLSTM (training path).
+
+    Identical math to :func:`mlstm_cell_ref` (validated in tests); wall-clock
+    scales as S/chunk sequential steps of parallel intra-chunk attention-like
+    compute — the TPU-friendly formulation (cf. TFLA / xLSTM kernels).
+    """
+    b, s, h, hd = q.shape
+    if state is None:
+        state = mlstm_state_init(b, h, hd)
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)))
+        # padded steps must not decay state: log_f = 0, log_i = -inf
+        log_i = log_i.at[:, s:].set(-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // chunk
+    rs = lambda x: jnp.moveaxis(
+        x.reshape((b, nc, chunk) + x.shape[2:]), 1, 0)
+    qc, kc, vc = rs(q.astype(jnp.float32)), rs(k.astype(jnp.float32)), rs(v.astype(jnp.float32))
+    lic, lfc = rs(log_i), rs(log_f)
+    scale = hd ** -0.5
+
+    def chunk_step(carry, xs):
+        C, n, m = carry                       # (B,H,hd,hd), (B,H,hd), (B,H)
+        qt, kt, vt, li, lf = xs               # (B,chunk,H,*)
+        li = jnp.moveaxis(li, 1, 2)           # (B,H,T)
+        lf = jnp.moveaxis(lf, 1, 2)
+        F = jnp.cumsum(lf, axis=-1)           # sum of log_f over (0, t]
+        u = li - F                            # (B,H,T)
+        cmax = jax.lax.cummax(u, axis=2)
+        m_t = F + jnp.maximum(m[..., None], cmax)          # (B,H,T)
+        # inter-chunk: q_t . C_prev * exp(m_prev + F_t - m_t)
+        qh = jnp.moveaxis(qt, 1, 2) * scale                # (B,H,T,hd)
+        kh = jnp.moveaxis(kt, 1, 2)
+        vh = jnp.moveaxis(vt, 1, 2)
+        inter_w = jnp.exp(m[..., None] + F - m_t)          # (B,H,T)
+        num_inter = jnp.einsum("bhtk,bhvk->bhtv", qh, C) * inter_w[..., None]
+        den_inter = jnp.einsum("bhtk,bhk->bht", qh, n) * inter_w
+        # intra-chunk: w_{t,j} = exp(F_t - F_j + li_j - m_t) for j <= t
+        wmat = jnp.exp(u[:, :, None, :] - (m_t - F)[..., None])  # (B,H,T,J)
+        tri = jnp.tril(jnp.ones((qt.shape[1], qt.shape[1]), jnp.float32))
+        wmat = wmat * tri
+        sc = jnp.einsum("bhtk,bhjk->bhtj", qh, kh) * wmat
+        num = num_inter + jnp.einsum("bhtj,bhjv->bhtv", sc, vh)
+        den_dot = den_inter + jnp.einsum("bhtj,bhjk,bhtk->bht", wmat, kh, qh)
+        den_fin = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_t))
+        ht = num / den_fin[..., None]                      # (B,H,T,hd)
+        # state update to end of chunk
+        T = qt.shape[1]
+        m_last = m_t[..., -1]
+        carry_decay = jnp.exp(m[..., None] + F[..., -1:] - m_last[..., None])
+        wj = jnp.exp(F[..., -1:] - F + li - m_last[..., None])  # (B,H,T)
+        C_new = C * carry_decay[..., None] + jnp.einsum(
+            "bhj,bhjv,bhjk->bhvk", wj, vh, kh)
+        n_new = n * carry_decay + jnp.einsum("bhj,bhjk->bhk", wj, kh)
+        return (C_new, n_new, m_last), jnp.moveaxis(ht, 2, 1)
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, (state["C"], state["n"], state["m"]), (qc, kc, vc, lic, lfc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, h, hd)
+    return hs[:, :s], {"C": C, "n": n, "m": m}
+
+
+def mlstm_state_init(batch: int, heads: int, head_dim: int) -> dict:
+    return {"C": jnp.zeros((batch, heads, head_dim, head_dim), jnp.float32),
+            "n": jnp.zeros((batch, heads, head_dim), jnp.float32),
+            "m": jnp.full((batch, heads), 0.0, jnp.float32)}
+
+
+def _mlstm_inputs(params, cfg, x):
+    xn = rmsnorm(params["norm"], x, cfg.rms_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xn, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xn, params["wv"])
+    gif = jnp.einsum("bsd,dhg->bshg", xn, params["w_if"]).astype(jnp.float32)
+    gif = gif + params["b_if"]
+    log_i = gif[..., 0]
+    log_f = -jax.nn.softplus(-gif[..., 1])   # log sigmoid
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", xn, params["w_ogate"])
+                       .astype(jnp.float32))
+    return xn, q, k, v, log_i, log_f, o
+
+
+def mlstm_block_forward(params, cfg, x, state=None, chunk: int = 64):
+    _, q, k, v, log_i, log_f, o = _mlstm_inputs(params, cfg, x)
+    h, new_state = mlstm_cell_chunkwise(q, k, v, log_i, log_f, state, chunk)
+    h = _headnorm(h, params["gn_scale"], cfg.rms_eps) * o.astype(h.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", h.astype(x.dtype), params["w_out"])
+    return out, new_state
+
+
+def mlstm_block_decode(params, cfg, x1, state):
+    _, q, k, v, log_i, log_f, o = _mlstm_inputs(params, cfg, x1)
+    h, new_state = mlstm_cell_ref(q, k, v, log_i, log_f, state)
+    h = _headnorm(h, params["gn_scale"], cfg.rms_eps) * o.astype(h.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", h.astype(x1.dtype), params["w_out"])
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory, recurrent gate feedback -> sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(rng, cfg, dtype) -> dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 5)
+    inner = h * hd          # sLSTM hidden width (may differ from d_model)
+    dff = int(2 * d)
+    wx = P.normal(ks[0], (d, 4, h, hd), dtype, d ** -0.5)
+    rh = P.normal(ks[1], (4, h, hd, hd), dtype, hd ** -0.5)
+    bias = jnp.zeros((4, h, hd), jnp.float32).at[2].set(3.0)  # forget-gate bias
+    return {
+        "norm": rmsnorm_init_(d),
+        "wx": P.box(wx, (P.EMBED, None, P.HEADS, P.HEAD_DIM)),
+        "rh": P.box(rh, (None, P.HEADS, P.HEAD_DIM, P.HEAD_DIM)),
+        "bias": P.box(bias, (None, P.HEADS, P.HEAD_DIM)),
+        "gn_scale": P.box(P.zeros((h, hd), jnp.float32), (P.HEADS, P.HEAD_DIM)),
+        "w_up1": P.box(P.lecun(ks[2], (inner, dff), dtype, inner), (None, P.MLP)),
+        "w_up2": P.box(P.lecun(ks[3], (inner, dff), dtype, inner), (None, P.MLP)),
+        "w_down": P.box(P.lecun(ks[4], (dff, d), dtype, dff), (P.MLP, P.EMBED_OUT)),
+    }
+
+
+def slstm_cell(params, zx, state):
+    """One sLSTM step. zx: (B, 4, H, hd) pre-activations from x; state dict."""
+    c, n, hprev, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhk,ghkv->bghv", hprev, params["rh"].astype(jnp.float32))
+    pre = zx.astype(jnp.float32) + rec + params["bias"]
+    z = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]
+    f_t = pre[:, 2]
+    o = jax.nn.sigmoid(pre[:, 3])
+    lf = -jax.nn.softplus(-f_t)               # log sigmoid(f)
+    m_new = jnp.maximum(lf + m, i_t)
+    i_ = jnp.exp(i_t - m_new)
+    f_ = jnp.exp(lf + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+
+def slstm_state_init(batch: int, heads: int, head_dim: int) -> dict:
+    z = lambda: jnp.zeros((batch, heads, head_dim), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.zeros((batch, heads, head_dim), jnp.float32)}
+
+
+def slstm_block_forward(params, cfg, x, state=None):
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    xn = rmsnorm(params["norm"], x, cfg.rms_eps)
+    zx = jnp.einsum("bsd,dghk->bsghk", xn, params["wx"])
+    if state is None:
+        state = slstm_state_init(b, h, hd)
+
+    def step(carry, z_t):
+        new_state, h_t = slstm_cell(params, z_t, carry)
+        return new_state, h_t
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(zx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)               # (B, S, H, hd)
+    hs = _headnorm(hs, params["gn_scale"], cfg.rms_eps)
+    y = hs.reshape(b, s, h * hd).astype(x.dtype)
+    # internal GeGLU projection (the sLSTM block's post-FFN; d_ff=0 means
+    # no *separate* MLP block in the stack)
+    g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", y, params["w_up1"])
+                    .astype(jnp.float32), approximate=True)
+    u = jnp.einsum("bsd,df->bsf", y, params["w_up2"])
+    out = jnp.einsum("bsf,fd->bsd", (g.astype(x.dtype) * u), params["w_down"])
+    return out, state
+
+
+def slstm_block_decode(params, cfg, x1, state):
+    out, new_state = slstm_block_forward(params, cfg, x1, state)
+    return out, new_state

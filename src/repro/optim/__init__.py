@@ -1,0 +1,6 @@
+"""From-scratch optimizers (no optax available offline)."""
+from repro.optim.adamw import adamw_init, adamw_update, sgd_init, sgd_update
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+
+__all__ = ["adamw_init", "adamw_update", "sgd_init", "sgd_update",
+           "cosine_schedule", "linear_warmup_cosine"]

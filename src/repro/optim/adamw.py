@@ -1,0 +1,91 @@
+"""AdamW and SGD, pytree-native.
+
+Optimizer state dtype is configurable: f32 (default) or bf16 — the bf16
+option matters at deepseek-v3 scale where f32 moments alone exceed the
+per-chip HBM budget on a single pod (see EXPERIMENTS.md §Roofline).
+States are sharded like their parameters (the launcher applies the same
+PartitionSpecs), i.e. ZeRO-style by construction.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.0,
+                 grad_clip: Optional[float] = 1.0):
+    """Returns (new_params, new_state). ``lr`` may be a scalar or a
+    schedule value already resolved for this step."""
+    step = state.step + 1
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    sdt = jax.tree.leaves(state.mu)[0].dtype
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32)
+        v32 = v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g32
+        v_new = b2 * v32 + (1 - b2) * jnp.square(g32)
+        mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(sdt), v_new.astype(sdt)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+def sgd_init(params, state_dtype=jnp.float32) -> SGDState:
+    return SGDState(step=jnp.zeros((), jnp.int32),
+                    momentum=jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, state_dtype), params))
+
+
+def sgd_update(params, grads, state: SGDState, *, lr, momentum: float = 0.9):
+    def upd(p, g, m):
+        m_new = momentum * m.astype(jnp.float32) + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m_new).astype(p.dtype), \
+            m_new.astype(m.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.momentum)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, SGDState(step=state.step + 1, momentum=new_m)

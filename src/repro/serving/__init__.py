@@ -1,0 +1,5 @@
+from repro.serving.engine import ServingEngine
+from repro.serving.cascade_engine import CascadeEngine
+from repro.serving.sampler import sample_logits
+
+__all__ = ["ServingEngine", "CascadeEngine", "sample_logits"]

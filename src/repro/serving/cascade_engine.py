@@ -1,0 +1,57 @@
+"""Cascade serving engine: batched one-shot queries through the ACE
+edge/cloud LM cascade, with running BWC/escalation metrics — the serving
+analog of the video-query application."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cascade.ecc_infer import CascadeLM
+
+
+@dataclasses.dataclass
+class CascadeMetrics:
+    queries: int = 0
+    escalated: int = 0
+    accepted: int = 0
+    dropped: int = 0
+    wan_bytes: int = 0
+    agreement: float = 0.0      # edge-vs-final agreement rate (running)
+
+
+class CascadeEngine:
+    def __init__(self, cascade: CascadeLM, edge_params, cloud_params, *,
+                 compact: bool = True):
+        self.cascade = cascade
+        self.edge_params = edge_params
+        self.cloud_params = cloud_params
+        self.metrics = CascadeMetrics()
+        fn = cascade.serve_step if compact else cascade.lockstep_step
+        self._step = jax.jit(
+            lambda ep, cp, batch: fn(ep, cp, batch))
+
+    def query(self, tokens: np.ndarray, extra: Dict = None) -> dict:
+        """tokens: (B, S) one-shot queries -> predictions + route info."""
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if extra:
+            batch.update({k: jnp.asarray(v) for k, v in extra.items()})
+        t0 = time.time()
+        out = self._step(self.edge_params, self.cloud_params, batch)
+        out = {k: np.asarray(v) for k, v in out.items()}
+        out["latency_s"] = time.time() - t0
+        m = self.metrics
+        b = tokens.shape[0]
+        agree = float(np.mean(out["pred"] == out["edge_pred"]))
+        m.agreement = ((m.agreement * m.queries + agree * b)
+                       / max(m.queries + b, 1))
+        m.queries += b
+        m.escalated += int(out["escalate"])
+        m.accepted += int(out["accept"])
+        m.dropped += int(out["drop"])
+        m.wan_bytes += int(out["wan_bytes"])
+        return out

@@ -1,0 +1,96 @@
+"""Serving engine: static-slot batched prefill + decode with KV caches.
+
+The engine owns the jitted ``prefill`` and ``decode_step`` callables (the
+latter is what the dry-run lowers for the decode shapes) and a simple
+request queue filled into fixed batch slots — the deployment-grade pattern
+(static shapes, no per-request recompilation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LM
+from repro.serving.sampler import sample_logits
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray           # (S_prompt,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, lm: LM, params, *, batch_slots: int = 8,
+                 max_seq_len: int = 512, seed: int = 0):
+        self.lm = lm
+        self.params = params
+        self.batch_slots = batch_slots
+        self.max_seq_len = max_seq_len
+        self.rng = jax.random.PRNGKey(seed)
+        self._queue: List[Request] = []
+        self._next_id = 0
+
+        def prefill(params, batch):
+            return lm.prefill(params, batch, cache_width=max_seq_len)
+
+        def decode(params, caches, tokens, cur_pos):
+            return lm.decode_step(params, caches, tokens, cur_pos)
+
+        self.prefill_fn = jax.jit(prefill)
+        self.decode_fn = jax.jit(decode)
+
+    # -- queue API --------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               temperature: float = 0.0) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new_tokens, temperature))
+        return rid
+
+    def run(self) -> Dict[int, Request]:
+        """Drain the queue in batches of ``batch_slots``."""
+        done: Dict[int, Request] = {}
+        while self._queue:
+            batch = self._queue[:self.batch_slots]
+            self._queue = self._queue[self.batch_slots:]
+            self._serve_batch(batch)
+            for r in batch:
+                done[r.request_id] = r
+        return done
+
+    # -- internals ----------------------------------------------------------------
+    def _serve_batch(self, requests: List[Request]) -> None:
+        t0 = time.time()
+        b = self.batch_slots
+        plen = max(len(r.prompt) for r in requests)
+        tokens = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(requests):
+            tokens[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        logits, caches = self.prefill_fn(self.params, {"tokens": jnp.asarray(tokens)})
+        last = logits[:, -1, :]
+        max_new = max(r.max_new_tokens for r in requests)
+        outs = np.zeros((b, max_new), np.int32)
+        temp = requests[0].temperature
+        for t in range(max_new):
+            self.rng, k = jax.random.split(self.rng)
+            nxt = sample_logits(k, last, temperature=temp)
+            outs[:, t] = np.asarray(nxt)[:b]
+            step_tokens = jnp.asarray(nxt)[:, None]
+            logits1, caches = self.decode_fn(self.params, caches, step_tokens,
+                                             jnp.int32(plen + t))
+            last = logits1[:, 0, :]
+        dt = time.time() - t0
+        for i, r in enumerate(requests):
+            r.output = outs[i, :r.max_new_tokens]
+            r.latency_s = dt

@@ -1,0 +1,4 @@
+from repro.training.train_loop import Trainer, make_train_step
+from repro.training.federated import FederatedTrainer
+
+__all__ = ["Trainer", "make_train_step", "FederatedTrainer"]

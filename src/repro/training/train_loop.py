@@ -1,0 +1,99 @@
+"""Training loop substrate: train_step factory (grads + AdamW update, remat
+inside the model's scanned stages) and a host-side Trainer driver with
+checkpointing and metric logging.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.models.model import LM
+from repro.optim import adamw_init, adamw_update
+
+
+def make_train_step(lm: LM, lr_schedule: Callable,
+                    weight_decay: float = 0.01,
+                    grad_clip: float = 1.0) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    This is the function the dry-run lowers for ``train_4k``: forward (+MoE
+    aux, +MTP), backward through the rematerialized scanned stages, global
+    grad-norm clip, AdamW."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = lm.loss(p, batch, train=True)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr = lr_schedule(opt_state.step)
+        params_new, opt_new = adamw_update(
+            params, grads, opt_state, lr=lr, weight_decay=weight_decay,
+            grad_clip=grad_clip)
+        out = {"loss": loss, "lr": lr}
+        out.update(metrics)
+        return params_new, opt_new, out
+
+    return train_step
+
+
+def make_eval_step(lm: LM) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = lm.loss(params, batch, train=False)
+        return {"loss": loss, **metrics}
+    return eval_step
+
+
+class Trainer:
+    """Host driver: jit once, iterate batches, checkpoint, log."""
+
+    def __init__(self, lm: LM, lr_schedule, *, ckpt_dir: Optional[str] = None,
+                 opt_state_dtype=jnp.float32, weight_decay: float = 0.01,
+                 log_every: int = 10, ckpt_every: int = 100,
+                 donate: bool = True):
+        self.lm = lm
+        self.ckpt_dir = ckpt_dir
+        self.log_every = log_every
+        self.ckpt_every = ckpt_every
+        self.opt_state_dtype = opt_state_dtype
+        step_fn = make_train_step(lm, lr_schedule, weight_decay)
+        self.train_step = jax.jit(
+            step_fn, donate_argnums=(0, 1) if donate else ())
+        self.history: list = []
+
+    def init_state(self, rng):
+        params, _ = self.lm.init(rng)
+        opt = adamw_init(params, self.opt_state_dtype)
+        return params, opt
+
+    def restore_or_init(self, rng):
+        params, opt = self.init_state(rng)
+        if self.ckpt_dir and latest_step(self.ckpt_dir) is not None:
+            (params, opt), step = load_checkpoint(self.ckpt_dir, (params, opt))
+            print(f"[trainer] restored step {step} from {self.ckpt_dir}")
+        return params, opt
+
+    def fit(self, params, opt, batches: Iterator[Dict[str, Any]],
+            num_steps: int, echo: bool = True):
+        t0 = time.time()
+        for i in range(num_steps):
+            batch = next(batches)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt, metrics = self.train_step(params, opt, batch)
+            if i % self.log_every == 0 or i == num_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = i
+                m["wall_s"] = round(time.time() - t0, 2)
+                self.history.append(m)
+                if echo:
+                    print(f"[trainer] step {i:5d} loss {m['loss']:.4f} "
+                          f"lr {m['lr']:.2e} ({m['wall_s']}s)")
+            if (self.ckpt_dir and self.ckpt_every
+                    and (i + 1) % self.ckpt_every == 0):
+                save_checkpoint(self.ckpt_dir, i + 1, (params, opt))
+        return params, opt

@@ -1,0 +1,5 @@
+"""Shared utilities: registries, pytree helpers, logging, timing."""
+from repro.utils.registry import Registry
+from repro.utils.tree import tree_size, tree_bytes, tree_allfinite
+
+__all__ = ["Registry", "tree_size", "tree_bytes", "tree_allfinite"]

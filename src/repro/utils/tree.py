@@ -1,0 +1,47 @@
+"""Pytree helpers (parameter counting, finiteness checks, flat paths)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of array elements in a pytree."""
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree) if hasattr(x, "shape")))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree (works on ShapeDtypeStruct too)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_allfinite(tree) -> bool:
+    """True iff every float leaf is finite everywhere."""
+    for x in jax.tree.leaves(tree):
+        arr = jnp.asarray(x)
+        if jnp.issubdtype(arr.dtype, jnp.floating):
+            if not bool(jnp.all(jnp.isfinite(arr))):
+                return False
+    return True
+
+
+def flat_paths(tree) -> dict:
+    """Flatten a pytree into {'a/b/c': leaf} using key paths."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(k) for k in path)
+        out[key] = leaf
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,116 @@
+"""Cascade core: gate properties, routing conservation, compact==lockstep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.cascade.gate import (ACCEPT, DROP, ESCALATE, adaptive_thresholds,
+                                ap_init, basic_gate, confidence_from_logits,
+                                gate_counts, make_thresholds)
+from repro.cascade.routing import (compact_escalations, gather_compacted,
+                                   scatter_back)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 64), hi=st.floats(0.5, 0.99), lo=st.floats(0.0, 0.45),
+       seed=st.integers(0, 10_000))
+def test_gate_partitions(n, hi, lo, seed):
+    conf = jax.random.uniform(jax.random.PRNGKey(seed), (n,))
+    routes = np.asarray(basic_gate(conf, make_thresholds(hi, lo)))
+    conf = np.asarray(conf)
+    assert np.all(routes[conf >= hi] == ACCEPT)
+    assert np.all(routes[conf < lo] == DROP)
+    assert np.all(routes[(conf >= lo) & (conf < hi)] == ESCALATE)
+    counts = gate_counts(jnp.asarray(routes))
+    assert int(counts["accept"] + counts["drop"] + counts["escalate"]) == n
+
+
+def test_gate_monotone_in_confidence():
+    """Raising confidence never moves a crop 'down' (drop < escalate < accept)."""
+    th = make_thresholds()
+    rank = {DROP: 0, ESCALATE: 1, ACCEPT: 2}
+    confs = jnp.linspace(0, 1, 101)
+    routes = [rank[int(basic_gate(jnp.float32(c), th))] for c in confs]
+    assert all(b >= a for a, b in zip(routes, routes[1:]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.integers(1, 48), cap_frac=st.floats(0.1, 1.0),
+       seed=st.integers(0, 10_000))
+def test_routing_conservation(b, cap_frac, seed):
+    """scatter_back: escalated rows within capacity take the cloud value,
+    everything else keeps the edge value; order preserved."""
+    cap = max(1, int(b * cap_frac))
+    esc = jax.random.bernoulli(jax.random.PRNGKey(seed), 0.4, (b,))
+    routing = compact_escalations(esc, cap)
+    order = np.asarray(routing.order)
+    assert sorted(order.tolist()) == list(range(b))       # a permutation
+    edge = jnp.arange(b, dtype=jnp.float32)[:, None] * jnp.ones((1, 3))
+    cloud_rows = gather_compacted(edge, routing, cap) + 1000.0
+    final = np.asarray(scatter_back(edge, cloud_rows, routing))
+    esc_np = np.asarray(esc)
+    n_esc = int(esc_np.sum())
+    served = set(order[:cap][np.asarray(routing.kept)[:min(cap, b)]].tolist()) \
+        if cap <= b else set()
+    for i in range(b):
+        if esc_np[i] and i in served:
+            assert final[i, 0] == i + 1000.0               # cloud result
+        else:
+            assert final[i, 0] == i                        # edge kept
+    # escalations beyond capacity degrade to edge results, never garbage
+    assert np.all(np.isfinite(final))
+    assert int(routing.num_escalated) == n_esc
+
+
+def test_escalated_first_stable_order():
+    esc = jnp.array([False, True, False, True, True, False])
+    routing = compact_escalations(esc, 3)
+    assert np.asarray(routing.order)[:3].tolist() == [1, 3, 4]
+
+
+def test_confidence_from_logits_bounds():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (32, 100)) * 5
+    conf = confidence_from_logits(logits)
+    assert float(conf.min()) >= 1.0 / 100
+    assert float(conf.max()) <= 1.0
+
+
+def test_adaptive_thresholds_shrink_and_recover():
+    state = ap_init()
+    # sustained deterioration shrinks the band
+    for _ in range(5):
+        state = adaptive_thresholds(state, jnp.float32(2.0), jnp.float32(0.0),
+                                    deteriorate_s=0.3)
+    assert float(state.th.hi) < 0.8
+    assert float(state.th.lo) > 0.1
+    # recovery restores toward BP
+    for _ in range(50):
+        state = adaptive_thresholds(state, jnp.float32(0.0), jnp.float32(0.0),
+                                    deteriorate_s=0.3)
+    assert abs(float(state.th.hi) - 0.8) < 1e-3
+    assert abs(float(state.th.lo) - 0.1) < 1e-3
+
+
+def test_cascade_lm_compact_matches_lockstep():
+    """Within capacity, the compacted cascade must agree with the
+    paper-faithful lockstep on every row."""
+    from repro.cascade.ecc_infer import CascadeLM, edge_variant
+    from repro.configs import get_config
+    from repro.models.model import LM
+
+    cloud_cfg = get_config("smollm-135m").reduced()
+    edge_cfg = edge_variant(cloud_cfg, layers=1)
+    cloud, edge = LM(cloud_cfg, kv_chunk=16), LM(edge_cfg, kv_chunk=16)
+    cp, _ = cloud.init(jax.random.PRNGKey(0))
+    ep, _ = edge.init(jax.random.PRNGKey(1))
+    cas = CascadeLM(edge, cloud, capacity_frac=1.0)   # capacity == batch
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (6, 12),
+                                          0, 100)}
+    a = cas.serve_step(ep, cp, batch)
+    b = cas.lockstep_step(ep, cp, batch)
+    assert np.array_equal(np.asarray(a["routes"]), np.asarray(b["routes"]))
+    assert np.array_equal(np.asarray(a["pred"]), np.asarray(b["pred"]))
+    # compaction strictly reduces boundary traffic when not everything
+    # escalates
+    if int(a["escalate"]) < 6:
+        assert int(a["wan_bytes"]) < int(b["wan_bytes"])

@@ -1,0 +1,82 @@
+"""Config-registry invariants: the 10 assigned architectures carry exactly
+the assigned hyper-parameters."""
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED_ARCHS, get_config
+from repro.configs.base import apply_long_context
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab, family)
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000, "hybrid"),
+    "qwen3-4b": (36, 2560, 32, 8, 9728, 151936, "dense"),
+    "smollm-135m": (30, 576, 9, 3, 1536, 49152, "dense"),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304, "ssm"),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768, "moe"),
+    "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152, "dense"),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280, "moe"),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048, "audio"),
+    "glm4-9b": (40, 4096, 32, 2, 13696, 151552, "dense"),
+    "internvl2-2b": (24, 2048, 16, 8, 8192, 92553, "vlm"),
+}
+
+
+def test_all_assigned_registered():
+    assert set(ASSIGNED_ARCHS) == set(EXPECTED)
+    for a in ASSIGNED_ARCHS:
+        assert a in ARCHS
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_assignment(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v, fam = EXPECTED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.family == fam
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= v
+    # stage decomposition covers every layer exactly once
+    assert sum(len(s.blocks) * s.repeat for s in cfg.stages) == L
+
+
+def test_moe_details():
+    mix = get_config("mixtral-8x22b").moe
+    assert (mix.num_experts, mix.num_experts_per_tok) == (8, 2)
+    dsv = get_config("deepseek-v3-671b")
+    assert (dsv.moe.num_experts, dsv.moe.num_experts_per_tok) == (256, 8)
+    assert dsv.moe.num_shared_experts == 1
+    assert dsv.mla is not None and dsv.mla.kv_lora_rank == 512
+    assert dsv.mtp_depth == 1
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_reduced_bounds(arch):
+    r = get_config(arch).reduced()
+    assert r.d_model <= 512
+    assert sum(s.repeat * len(s.blocks) for s in r.stages) <= 4
+    if r.moe:
+        assert r.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_long_context_policy(arch):
+    """Every arch must be runnable at long_500k: natively sub-quadratic or
+    via the sliding-window override (DESIGN.md §5)."""
+    cfg = get_config(arch)
+    lc = apply_long_context(cfg)
+    assert lc.sub_quadratic
+    if not cfg.sub_quadratic:
+        for s in lc.stages:
+            for b in s.blocks:
+                if b.mixer in ("attn", "mla"):
+                    assert b.window is not None
+
+
+def test_paper_app_config():
+    vq = get_config("ace-video-query")
+    assert vq.accept_threshold == 0.8 and vq.drop_threshold == 0.1
+    assert vq.num_edge_clouds == 3 and vq.nodes_per_ec == 4
+    assert (vq.uplink_mbps, vq.downlink_mbps) == (20.0, 40.0)

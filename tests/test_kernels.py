@@ -1,0 +1,92 @@
+"""Pallas kernels vs. ref.py oracles: shape/dtype sweeps in interpret mode
+(deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cascade.gate import make_thresholds
+from repro.kernels import ref
+from repro.kernels.cascade_gate import cascade_gate
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+
+ATTN_CASES = [
+    # (b, sq, sk, h, kv, hd, window, dtype)
+    (1, 64, 64, 4, 4, 32, None, jnp.float32),
+    (2, 64, 64, 4, 2, 64, None, jnp.float32),
+    (1, 100, 100, 3, 1, 32, None, jnp.float32),   # MQA, ragged seq
+    (2, 64, 64, 4, 4, 32, 24, jnp.float32),       # sliding window
+    (1, 1, 96, 4, 2, 32, None, jnp.float32),      # decode shape
+    (1, 1, 96, 4, 2, 32, 16, jnp.float32),        # windowed decode
+    (1, 48, 48, 2, 2, 128, None, jnp.bfloat16),   # bf16
+    (1, 32, 32, 8, 8, 256, None, jnp.float32),    # hd=256 (recurrentgemma)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES,
+                         ids=[f"{c[:-1]}-{c[-1].__name__}" for c in ATTN_CASES])
+def test_flash_attention_sweep(case):
+    b, sq, sk, h, kv, hd, window, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, sk, kv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, sk, kv, hd)).astype(dtype)
+    out = flash_attention(q, k, v, window=window, block_q=32, block_k=32,
+                          interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert out.dtype == dtype
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - expect.astype(jnp.float32)))) < tol
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(3, 80), w=st.integers(8, 70),
+       bt=st.sampled_from([8, 16, 32]), seed=st.integers(0, 1000))
+def test_rglru_scan_property(s, w, bt, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = jax.random.uniform(ks[0], (1, s, w), jnp.float32, 0.3, 0.999)
+    b = jax.random.normal(ks[1], (1, s, w), jnp.float32)
+    h0 = jax.random.normal(ks[2], (1, w), jnp.float32)
+    h, hl = rglru_scan(a, b, h0, block_t=bt, block_w=32, interpret=True)
+    hr, hlr = ref.rglru_scan_ref(a, b, h0)
+    assert float(jnp.max(jnp.abs(h - hr))) < 1e-4
+    assert float(jnp.max(jnp.abs(hl - hlr))) < 1e-4
+
+
+@pytest.mark.parametrize("t,v,dtype", [
+    (64, 512, jnp.float32),
+    (100, 500, jnp.float32),       # both dims ragged
+    (7, 8000, jnp.float32),        # vocab >> tokens
+    (128, 1024, jnp.bfloat16),
+])
+def test_cascade_gate_sweep(t, v, dtype):
+    logits = (jax.random.normal(jax.random.PRNGKey(1), (t, v)) * 3).astype(dtype)
+    conf, routes, counts = cascade_gate(logits, block_t=32, block_v=256,
+                                        interpret=True)
+    expect = ref.cascade_gate_ref(logits, make_thresholds())
+    tol = 1e-2 if dtype == jnp.bfloat16 else 1e-5
+    assert float(jnp.max(jnp.abs(conf - expect["conf"]))) < tol
+    if dtype == jnp.float32:
+        assert bool(jnp.all(routes == expect["routes"]))
+        assert bool(jnp.all(counts == expect["counts"]))
+    assert int(jnp.sum(counts)) == t
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(1, 60), v=st.integers(8, 600),
+       hi=st.floats(0.5, 0.95), lo=st.floats(0.01, 0.4),
+       seed=st.integers(0, 1000))
+def test_cascade_gate_property(t, v, hi, lo, seed):
+    """Property: kernel counts partition T; routes consistent with conf."""
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, v)) * 2
+    conf, routes, counts = cascade_gate(logits, hi=hi, lo=lo, block_t=16,
+                                        block_v=64, interpret=True)
+    conf = np.asarray(conf)
+    routes = np.asarray(routes)
+    assert int(np.sum(np.asarray(counts))) == t
+    assert np.all(routes[conf >= hi] == 0)
+    assert np.all(routes[conf < lo] == 1)
+    assert np.all(routes[(conf >= lo) & (conf < hi)] == 2)

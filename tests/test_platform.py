@@ -1,0 +1,158 @@
+"""ACE platform integration: registration -> topology -> orchestration ->
+deployment -> update -> removal, plus orchestrator constraint properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.orchestrator import PlanningError
+from repro.core.platform import AcePlatform
+from repro.core.registry import IMAGES, image
+from repro.core.topology import Component, Resources, Topology
+
+
+@image("test/null")
+class NullComponent:
+    def __init__(self, **kw):
+        self.kw = kw
+        self.running = False
+
+    def start(self, ctx):
+        self.ctx = ctx
+        self.running = True
+
+    def stop(self):
+        self.running = False
+
+
+def _platform():
+    ace = AcePlatform()
+    ace.register_user("alice")
+    infra = ace.register_infrastructure(
+        "alice", num_ecs=2, nodes_per_ec=3,
+        edge_labels=[["x86"], ["camera"], ["camera"]])
+    ace.deploy_services(infra)
+    return ace, infra
+
+
+def _topo(**comps):
+    return Topology(app="app", version=1, components=comps)
+
+
+def test_full_lifecycle():
+    ace, infra = _platform()
+    topo = _topo(
+        worker=Component(name="worker", image="test/null", placement="edge",
+                         replicas="per_ec",
+                         resources=Resources(cpu=1.0, memory_mb=256)),
+        head=Component(name="head", image="test/null", placement="cloud",
+                       connections=["worker"]),
+    )
+    ace.submit_app("alice", infra, topo)
+    plan = ace.deploy_app("alice", "app")
+    assert len(plan.instances["worker"]) == 2          # one per EC
+    assert len(plan.instances["head"]) == 1
+    for inst in plan.instances["worker"]:
+        assert ".ec-" in inst.node
+    assert ".cc-" in plan.instances["head"][0].node
+    # agents actually started the components
+    assert len(ace.instances(infra, "worker")) == 2
+    # resources were allocated on the bound nodes
+    node = infra.nodes[plan.instances["worker"][0].node]
+    assert node.allocated.cpu == 1.0
+    # removal releases them
+    ace.remove_app("alice", "app")
+    assert len(ace.instances(infra, "worker")) == 0
+    assert node.allocated.cpu == 0.0
+
+
+def test_label_constraint():
+    ace, infra = _platform()
+    topo = _topo(cam=Component(name="cam", image="test/null",
+                               replicas="per_label", labels=["camera"]))
+    ace.submit_app("alice", infra, topo)
+    plan = ace.deploy_app("alice", "app")
+    assert len(plan.instances["cam"]) == 4             # 2 ECs x 2 cam nodes
+    for inst in plan.instances["cam"]:
+        assert "camera" in infra.nodes[inst.node].labels
+
+
+def test_unsatisfiable_resources_raise():
+    ace, infra = _platform()
+    topo = _topo(fat=Component(
+        name="fat", image="test/null", placement="edge",
+        resources=Resources(cpu=1000.0, memory_mb=1)))
+    ace.submit_app("alice", infra, topo)
+    with pytest.raises(PlanningError):
+        ace.deploy_app("alice", "app")
+
+
+def test_accelerator_constraint_pins_to_cloud():
+    ace, infra = _platform()
+    topo = _topo(gpu=Component(
+        name="gpu", image="test/null", placement="any",
+        resources=Resources(cpu=1.0, memory_mb=64, accelerator=True)))
+    ace.submit_app("alice", infra, topo)
+    plan = ace.deploy_app("alice", "app")
+    assert ".cc-" in plan.instances["gpu"][0].node
+
+
+def test_incremental_update():
+    ace, infra = _platform()
+    c = lambda name, cpu: Component(name=name, image="test/null",
+                                    resources=Resources(cpu=cpu,
+                                                        memory_mb=64))
+    ace.submit_app("alice", infra, _topo(a=c("a", 0.1), b=c("b", 0.1)))
+    ace.deploy_app("alice", "app")
+    new = _topo(a=c("a", 0.1), b=c("b", 0.5), d=c("d", 0.1))  # b changed, d new
+    plan = ace.update_app("alice", "app", new, incremental=True)
+    assert set(plan.instances) == {"a", "b", "d"}
+    assert len(ace.instances(infra, "a")) == 1          # untouched
+    assert len(ace.instances(infra, "d")) == 1          # added
+
+
+def test_node_shielding_redirects_placement():
+    ace, infra = _platform()
+    ctl = ace._controllers[str(infra.infra_id)]
+    # shield every node of the first EC
+    first_ec = infra.ecs[0]
+    for key, node in infra.nodes.items():
+        if node.cluster == first_ec:
+            ctl.shield_node(infra, key)
+    topo = _topo(w=Component(name="w", image="test/null", placement="edge"))
+    ace.submit_app("alice", infra, topo)
+    plan = ace.deploy_app("alice", "app")
+    assert str(first_ec) not in plan.instances["w"][0].node
+
+
+def test_topology_yaml_roundtrip():
+    topo = _topo(a=Component(name="a", image="test/null",
+                             connections=[], params={"x": 1}))
+    again = Topology.from_yaml(topo.to_yaml())
+    assert again.to_dict() == topo.to_dict()
+
+
+def test_topology_validates_connections():
+    with pytest.raises(ValueError):
+        _topo(a=Component(name="a", image="i", connections=["ghost"]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_comps=st.integers(1, 6), cpus=st.lists(
+    st.floats(0.1, 2.0), min_size=1, max_size=6), seed=st.integers(0, 99))
+def test_orchestrator_never_overcommits(n_comps, cpus, seed):
+    """Property: any successful plan keeps every node within capacity."""
+    ace, infra = _platform()
+    comps = {}
+    for i in range(n_comps):
+        cpu = cpus[i % len(cpus)]
+        comps[f"c{i}"] = Component(
+            name=f"c{i}", image="test/null", placement="any",
+            resources=Resources(cpu=cpu, memory_mb=64))
+    ace.submit_app("alice", infra, Topology(app="app", version=1,
+                                            components=comps))
+    try:
+        plan = ace.deploy_app("alice", "app")
+    except PlanningError:
+        return
+    for node in infra.nodes.values():
+        assert node.allocated.cpu <= node.capacity.cpu + 1e-9
+        assert node.allocated.memory_mb <= node.capacity.memory_mb

@@ -1,0 +1,96 @@
+"""Serving: prefill+decode == full forward; engines; partitioned inference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, dense_stages
+from repro.models.model import LM
+
+
+def _tiny_cfg():
+    return ModelConfig(
+        name="tiny", family="dense", source="t", num_layers=3, d_model=48,
+        num_heads=4, num_kv_heads=2, head_dim=12, d_ff=96, vocab_size=128,
+        stages=dense_stages(3), param_dtype="float32")
+
+
+def test_prefill_then_decode_matches_full_forward():
+    """The deployment-critical identity: prefill(S) + decode(t) logits must
+    equal forward(S+t) at every decoded position."""
+    cfg = _tiny_cfg()
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    total, prompt = 12, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, total), 0, 100)
+    full_logits, _, _, _ = lm.forward(params, {"tokens": tokens})
+    logits_p, caches = lm.prefill(params, {"tokens": tokens[:, :prompt]},
+                                  cache_width=total)
+    assert float(jnp.max(jnp.abs(
+        logits_p[:, -1] - full_logits[:, prompt - 1]))) < 1e-3
+    for t in range(prompt, total):
+        step_logits, caches = lm.decode_step(
+            params, caches, tokens[:, t:t + 1], jnp.int32(t))
+        err = float(jnp.max(jnp.abs(step_logits[:, 0] - full_logits[:, t])))
+        assert err < 1e-3, (t, err)
+
+
+def test_serving_engine_batches_and_completes():
+    from repro.serving import ServingEngine
+    cfg = _tiny_cfg()
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(lm, params, batch_slots=4, max_seq_len=32)
+    ids = [eng.submit(np.arange(3 + i), max_new_tokens=5) for i in range(6)]
+    done = eng.run()
+    assert set(done) == set(ids)
+    for r in done.values():
+        assert r.output.shape == (5,)
+        assert r.latency_s > 0
+
+
+def test_cascade_engine_metrics():
+    from repro.cascade.ecc_infer import CascadeLM, edge_variant
+    from repro.serving import CascadeEngine
+    cloud_cfg = _tiny_cfg()
+    edge_cfg = edge_variant(cloud_cfg, layers=1)
+    cloud, edge = LM(cloud_cfg, kv_chunk=8), LM(edge_cfg, kv_chunk=8)
+    cp, _ = cloud.init(jax.random.PRNGKey(0))
+    ep, _ = edge.init(jax.random.PRNGKey(1))
+    eng = CascadeEngine(CascadeLM(edge, cloud), ep, cp)
+    tokens = np.random.default_rng(0).integers(0, 100, size=(8, 10))
+    out = eng.query(tokens)
+    m = eng.metrics
+    assert m.queries == 8
+    assert m.accepted + m.dropped + m.escalated == 8
+    assert out["pred"].shape == (8,)
+
+
+def test_partitioned_lm_matches_full():
+    """Intra-model ECC inference: edge bottom + cloud top == monolith."""
+    from repro.core.patterns.inference import PartitionedLM
+    cfg = _tiny_cfg()
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, 100)
+    full, _, _, _ = lm.forward(params, {"tokens": tokens})
+    part = PartitionedLM(lm, split=1)
+    hidden, positions = part.edge_forward(params, {"tokens": tokens})
+    logits = part.cloud_forward(params, hidden, positions)
+    assert float(jnp.max(jnp.abs(full - logits))) < 1e-3
+
+
+def test_best_partition_tradeoffs():
+    from repro.core.patterns.inference import best_partition
+    cfg = get_config("smollm-135m")
+    # slow WAN -> all-edge or all-cloud beats mid-split (boundary is big)
+    k_slow, _ = best_partition(cfg, batch=1, seq_len=128,
+                               edge_flops_s=5e10, cloud_flops_s=5e12,
+                               uplink_mbps=1.0, delay_s=0.05)
+    total = sum(s.repeat for s in cfg.stages)
+    assert k_slow in (0, total)
+    # free WAN + slow edge -> everything to the cloud
+    k_fast, _ = best_partition(cfg, batch=1, seq_len=128,
+                               edge_flops_s=1e9, cloud_flops_s=5e13,
+                               uplink_mbps=1e6, delay_s=0.0)
+    assert k_fast == 0
