@@ -13,8 +13,8 @@ from repro.kernels import ref
 
 
 def _time(fn, *args, iters: int = 5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    warm = fn(*args)                                     # evaluate once
+    (warm[0] if isinstance(warm, tuple) else warm).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

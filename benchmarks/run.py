@@ -5,12 +5,15 @@
   bench_cascade      LM cascade: lockstep (paper) vs compacted (beyond)
   bench_partition    intra-model split-point policy (Principle Four)
   bench_kernels      kernel micro-benchmarks (host oracle timing)
+  bench_serving      continuous batching vs drain-batch baseline
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; the serving suite also dumps its
+baseline-vs-new comparison to ``BENCH_serving.json``.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -23,7 +26,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_cascade, bench_kernels, bench_partition,
-                            bench_roofline, bench_video_query)
+                            bench_roofline, bench_serving,
+                            bench_video_query)
 
     suites = {
         "video_query": lambda: bench_video_query.run(
@@ -32,6 +36,7 @@ def main() -> None:
         "partition": bench_partition.run,
         "kernels": bench_kernels.run,
         "cascade": bench_cascade.run,
+        "serving": bench_serving.run,
     }
     print("name,us_per_call,derived")
     failures = []
@@ -43,6 +48,10 @@ def main() -> None:
             rows = fn()
             if name == "video_query":
                 vq_rows = rows
+            if name == "serving":
+                with open("BENCH_serving.json", "w") as f:
+                    json.dump(bench_serving.run.last_result, f, indent=2)
+                print("# wrote BENCH_serving.json", file=sys.stderr)
             for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
             sys.stdout.flush()

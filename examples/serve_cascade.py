@@ -16,7 +16,7 @@ from repro.cascade.ecc_infer import CascadeLM, edge_variant
 from repro.cascade.gate import make_thresholds
 from repro.configs import get_config
 from repro.models.model import LM
-from repro.serving import CascadeEngine, ServingEngine
+from repro.serving import CascadeEngine, CascadeServingEngine, ServingEngine
 
 
 def main():
@@ -42,13 +42,29 @@ def main():
               f"escalate={m.escalated:2d} wan_bytes={m.wan_bytes:6d} "
               f"edge/cloud agreement={m.agreement:.2f}")
 
-    # plain autoregressive serving with the KV-cache engine
-    eng = ServingEngine(cloud, cp, batch_slots=4, max_seq_len=64)
-    for i in range(4):
-        eng.submit(rng.integers(0, 100, size=5 + i), max_new_tokens=8)
+    # continuous-batching autoregressive serving: 8 mixed-length requests
+    # share 4 slots; new requests slide in as short ones finish
+    eng = ServingEngine(cloud, cp, batch_slots=4, max_seq_len=64,
+                        min_bucket=8)
+    for i in range(8):
+        eng.submit(rng.integers(0, 100, size=5 + 3 * i),
+                   max_new_tokens=4 + 2 * i)
     done = eng.run()
-    print(f"\nautoregressive engine served {len(done)} requests, e.g. "
+    print(f"\ncontinuous-batching engine served {len(done)} requests in "
+          f"{eng.decode_steps} decode steps "
+          f"(occupancy {eng.occupancy():.0%}), e.g. "
           f"req0 -> {done[0].output.tolist()}")
+
+    # generative cascade: the edge gate routes each prompt, generation runs
+    # on the routed continuous-batching engine
+    gen = CascadeServingEngine(CascadeLM(edge, cloud, thresholds=th),
+                               ep, cp, batch_slots=4, max_seq_len=64)
+    for i in range(8):
+        gen.submit(rng.integers(0, 100, size=6 + i), max_new_tokens=6)
+    routed = gen.run()
+    m = gen.metrics
+    print(f"generative cascade: accept={m.accepted} drop={m.dropped} "
+          f"escalate={m.escalated} wan_bytes={m.wan_bytes}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
 """Pallas TPU kernels for the compute hot-spots of the workloads ACE hosts
 and of the cascade itself (DESIGN.md §3).
 
-  flash_attention — blockwise causal/sliding-window attention (GQA)
-  rglru_scan      — blocked RG-LRU linear-recurrence scan
-  cascade_gate    — fused confidence-gate + route-count reduction
+  flash_attention  — blockwise causal/sliding-window attention (GQA)
+  decode_attention — single-token decode attention over a ring KV cache
+  rglru_scan       — blocked RG-LRU linear-recurrence scan
+  cascade_gate     — fused confidence-gate + route-count reduction
 
 Each has a pure-jnp oracle in ``ref.py`` and a jit'd dispatch wrapper in
 ``ops.py``. On CPU (this container) kernels run in interpret mode; the

@@ -1,0 +1,139 @@
+"""Decode-attention Pallas kernel — single-token queries against a ring
+KV cache (causal, sliding-window, GQA).
+
+This is the memory-bound half of serving: every decode step streams the
+whole cache through the core once per layer, so the kernel's job is to keep
+that stream at HBM bandwidth while the MXU work stays tiny. TPU mapping:
+grid ``(B, KV, num_kv_blocks)``; the last axis is the sequential
+("arbitrary") reduction over cache blocks with the streaming-softmax carry
+(acc, m, l) held in VMEM scratch. GQA is handled by folding the query group
+into the head tile: each (batch, kv-head) program attends with a
+``(group, head_dim)`` q tile against shared ``(block_k, head_dim)`` k/v
+tiles, so KV blocks are fetched once per group rather than once per q head.
+
+Positions are data, not geometry: the cache is a ring (slot = pos % width),
+so causal/window masking reads the per-slot ``k_pos`` array (−1 = empty
+slot) instead of assuming contiguous layout. Blocks whose every slot is
+masked (empty ring tail, outside the window) skip the MXU work entirely via
+``pl.when`` — on a cold cache only the written prefix costs anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# renamed TPUCompilerParams -> CompilerParams across jax versions
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, window: Optional[int],
+            num_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                           # (G, hd)
+    k = k_ref[0, :, 0, :]                     # (bk, hd)
+    v = v_ref[0, :, 0, :]
+    qp = qpos_ref[0, 0]                       # scalar: this request's position
+    kp = kpos_ref[0:1, :]                     # (1, bk) ring-slot positions
+
+    valid = (kp >= 0) & (kp <= qp)            # empty slots + causality
+    if window is not None:
+        valid &= kp > (qp - window)
+
+    # data-dependent block skip: a ring cache is mostly empty early on, and
+    # a sliding window masks all but ~window/block_k blocks
+    @pl.when(jnp.any(valid))
+    def _compute():
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (G, bk)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_k - 1)
+    def _flush():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, q_pos, k_pos, *, window: Optional[int] = None,
+                     scale: Optional[float] = None, block_k: int = 128,
+                     interpret: bool = False):
+    """q: (B, 1, H, hd) or (B, H, hd); k, v: (B, W, KV, hd) ring cache;
+    q_pos: (B,) int32 current positions; k_pos: (B, W) int32 cache-slot
+    positions (−1 = empty). Returns attention output shaped like q.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        assert q.shape[1] == 1, "decode kernel takes a single query token"
+        q = q[:, 0]
+    b, h, hd = q.shape
+    w, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    block_k = min(block_k, w)
+
+    pad = (-w) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nk = k.shape[1] // block_k
+
+    qg = q.reshape(b, kv, g, hd)
+    qp = jnp.asarray(q_pos, jnp.int32).reshape(b, 1)
+    kp = jnp.asarray(k_pos, jnp.int32)
+
+    kernel = functools.partial(_kernel, scale=scale, window=window, num_k=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b_, h_, ik: (b_, ik, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b_, h_, ik: (b_, ik, h_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, ik: (b_, 0)),
+            pl.BlockSpec((1, block_k), lambda b_, h_, ik: (b_, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qg, k, v, qp, kp)
+    out = out.reshape(b, h, hd)
+    return out[:, None] if squeeze else out

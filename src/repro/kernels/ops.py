@@ -14,6 +14,7 @@ import jax
 
 from repro.kernels import ref as _ref
 from repro.kernels.cascade_gate import cascade_gate as _gate_kernel
+from repro.kernels.decode_attention import decode_attention as _da_kernel
 from repro.kernels.flash_attention import flash_attention as _fa_kernel
 from repro.kernels.rglru_scan import rglru_scan as _rglru_kernel
 
@@ -34,6 +35,21 @@ def attention(q, k, v, *, causal: bool = True,
                           interpret=not _on_tpu() if interpret is None
                           else interpret)
     return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "use_kernel", "interpret"))
+def decode_attn(q, k, v, q_pos, k_pos, *, window: Optional[int] = None,
+                scale: Optional[float] = None,
+                use_kernel: Optional[bool] = None,
+                interpret: Optional[bool] = None):
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _da_kernel(q, k, v, q_pos, k_pos, window=window, scale=scale,
+                          interpret=not _on_tpu() if interpret is None
+                          else interpret)
+    return _ref.decode_attention_ref(q, k, v, q_pos, k_pos, window=window,
+                                     scale=scale)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))

@@ -48,6 +48,33 @@ def flash_attention_streaming_ref(q, k, v, *, causal: bool = True,
                                scale=q.shape[-1] ** -0.5, kv_chunk=kv_chunk)
 
 
+def decode_attention_ref(q, k, v, q_pos, k_pos, *,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """Dense single-token decode attention over a ring KV cache.
+
+    q: (B, 1, H, hd) or (B, H, hd); k, v: (B, W, KV, hd); q_pos: (B,);
+    k_pos: (B, W) with −1 marking empty cache slots.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    b, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k.astype(jnp.float32)) * scale
+    valid = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    if window is not None:
+        valid &= k_pos > (q_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))
+    o = o.reshape(b, h, hd).astype(q.dtype)
+    return o[:, None] if squeeze else o
+
+
 def rglru_scan_ref(a, b, h0) -> tuple:
     """h_t = a_t * h_{t-1} + b_t. a, b: (B, S, W) f32; h0: (B, W).
     Returns (h (B,S,W), h_last (B,W))."""

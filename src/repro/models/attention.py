@@ -262,22 +262,19 @@ _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
 def decode_attention(q, k, v, q_pos, k_pos, *, window: Optional[int],
-                     scale: float):
-    """Single-step attention: q (B, 1, H, hd) against the whole cache."""
-    b, _, h, hd = q.shape
-    kv = k.shape[2]
-    g = h // kv
-    qg = q.reshape(b, kv, g, hd)
-    s = jnp.einsum("bkgd,bckd->bkgc", qg, k,
-                   preferred_element_type=jnp.float32) * scale
-    valid = (k_pos <= q_pos[:, None]) & (k_pos >= 0)
-    if window is not None:
-        valid &= k_pos > (q_pos[:, None] - window)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(v.dtype), v,
-                     preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, h, hd).astype(q.dtype)
+                     scale: float, use_kernel: Optional[bool] = None,
+                     interpret: Optional[bool] = None):
+    """Single-step attention: q (B, 1, H, hd) against the whole cache.
+
+    q_pos: (B,) per-request positions; k_pos: (B, W) ring-slot positions
+    (−1 = empty). Dispatch (Pallas kernel on TPU, jnp oracle on CPU,
+    ``use_kernel=True`` + ``interpret=True`` for kernel-body tests) lives
+    in ``repro.kernels.ops.decode_attn``; imported lazily because
+    ``kernels.ref`` imports this module for the flash oracle.
+    """
+    from repro.kernels.ops import decode_attn
+    return decode_attn(q, k, v, q_pos, k_pos, window=window, scale=scale,
+                       use_kernel=use_kernel, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -293,16 +290,25 @@ def init_kv_cache(batch: int, width: int, kv_heads: int, head_dim: int,
     }
 
 
+def positions_1d(cur_pos, batch: int) -> jnp.ndarray:
+    """Normalize a scalar-or-(B,) decode position to (B,) int32.
+
+    Continuous batching gives every slot its own position; the single-stream
+    callers (tests, dry-run lowering) still pass a scalar.
+    """
+    return jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (batch,))
+
+
 def cache_write(cache: dict, k1, v1, cur_pos) -> dict:
-    """Write one step (B, 1, KV, hd) at ring slot ``cur_pos % width``."""
-    width = cache["k"].shape[1]
-    slot = jnp.asarray(cur_pos, jnp.int32) % width
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1, slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1, slot, axis=1)
-    pos = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32),
-                                       (cache["pos"].shape[0], 1)),
-        slot, axis=1)
+    """Write one step (B, 1, KV, hd) at per-request ring slot
+    ``cur_pos % width``. ``cur_pos``: scalar or (B,)."""
+    b, width = cache["k"].shape[0], cache["k"].shape[1]
+    cur = positions_1d(cur_pos, b)
+    slot = cur % width
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, slot].set(k1[:, 0])
+    v = cache["v"].at[rows, slot].set(v1[:, 0])
+    pos = cache["pos"].at[rows, slot].set(cur)
     return {"k": k, "v": v, "pos": pos}
 
 
@@ -371,9 +377,10 @@ def attn_forward(params, cfg, x, positions, *, window: Optional[int],
 
 
 def attn_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int]):
-    """One-token decode. x: (B, 1, D); cache from ``init_kv_cache``."""
+    """One-token decode. x: (B, 1, D); cache from ``init_kv_cache``;
+    ``cur_pos``: scalar or (B,) per-request positions."""
     b = x.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b, 1))
+    positions = positions_1d(cur_pos, b)[:, None]
     q, k1, v1 = _qkv(params, cfg, x, positions)
     cache = cache_write(cache, k1, v1, cur_pos)
     out = decode_attention(q, cache["k"], cache["v"], positions[:, 0],
@@ -495,18 +502,18 @@ def mla_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int]):
     saving of MLA."""
     m = cfg.mla
     b = x.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b, 1))
+    cur = positions_1d(cur_pos, b)
+    positions = cur[:, None]
     q_nope, q_rope = _mla_q(params, cfg, x, positions)          # (B,1,H,*)
     ckv1, krope1 = _mla_kv_latent(params, cfg, x, positions)    # (B,1,r)
-    # ring-write
+    # per-request ring-write
     width = cache["ckv"].shape[1]
-    slot = jnp.asarray(cur_pos, jnp.int32) % width
+    slot = cur % width
+    rows = jnp.arange(b)
     cache = {
-        "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv1, slot, 1),
-        "krope": jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope1, slot, 1),
-        "pos": jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b, 1)),
-            slot, 1),
+        "ckv": cache["ckv"].at[rows, slot].set(ckv1[:, 0]),
+        "krope": cache["krope"].at[rows, slot].set(krope1[:, 0]),
+        "pos": cache["pos"].at[rows, slot].set(cur),
     }
     # absorb W_uk into q: q_lat (B,H,r)
     q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["w_uk"])

@@ -368,9 +368,12 @@ class LM:
         return caches
 
     def decode_step(self, params, caches, tokens, cur_pos):
-        """One-token decode. tokens: (B, 1) (audio: (B, 1, C)).
+        """One-token decode. tokens: (B, 1) (audio: (B, 1, C));
+        ``cur_pos``: scalar or (B,) per-request positions (continuous
+        batching decodes slots at different depths in one step).
         Returns (logits (B, 1, V...), new caches)."""
         cfg = self.cfg
+        cur_pos = att.positions_1d(cur_pos, tokens.shape[0])
         batch = {"tokens": tokens}
         if cfg.frontend.kind == "vision":
             # decode consumes plain text tokens; vision prefix lives in cache

@@ -1,5 +1,8 @@
-from repro.serving.engine import ServingEngine
-from repro.serving.cascade_engine import CascadeEngine
-from repro.serving.sampler import sample_logits
+from repro.serving.engine import (DrainBatchEngine, Request, ServingEngine,
+                                  bucket_for, prompt_buckets)
+from repro.serving.cascade_engine import CascadeEngine, CascadeServingEngine
+from repro.serving.sampler import sample_logits, sample_logits_batch
 
-__all__ = ["ServingEngine", "CascadeEngine", "sample_logits"]
+__all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
+           "CascadeServingEngine", "sample_logits", "sample_logits_batch",
+           "prompt_buckets", "bucket_for"]

@@ -1,9 +1,25 @@
-"""Serving engine: static-slot batched prefill + decode with KV caches.
+"""Serving engines: continuous batching over per-slot request state.
 
-The engine owns the jitted ``prefill`` and ``decode_step`` callables (the
-latter is what the dry-run lowers for the decode shapes) and a simple
-request queue filled into fixed batch slots — the deployment-grade pattern
-(static shapes, no per-request recompilation).
+``ServingEngine`` is the production path. It owns a fixed pool of
+``batch_slots`` decode slots sharing one device-resident KV cache; requests
+are admitted into free slots as others finish (continuous batching), so a
+long generation never stalls the short ones behind it. Prompt lengths are
+bucketed to a small set of power-of-two shapes, bounding prefill
+recompilation to ``len(buckets)`` variants regardless of traffic. The decode
+inner step is one fused jitted call — sample → cache-append →
+done-detection all on device — and the Python loop performs a single small
+host sync per step (the (B,) active mask) for EOS/slot management; logits
+never leave the device.
+
+Prompts are right-padded to their bucket. With the ring cache this is
+*exact*: pad entries sit at positions ≥ the prompt length, causal masking
+hides them until the decode stream overwrites their ring slot at that same
+position, so bucketing never changes a single output token.
+
+``DrainBatchEngine`` preserves the previous drain-the-queue batcher (pad
+the batch to its longest prompt, run everyone for the longest budget,
+round-trip logits to the host each token) as the measured baseline for
+``benchmarks/bench_serving.py``.
 """
 from __future__ import annotations
 
@@ -16,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
-from repro.serving.sampler import sample_logits
+from repro.serving.sampler import sample_logits, sample_logits_batch
 
 
 @dataclasses.dataclass
@@ -26,12 +42,212 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     output: Optional[np.ndarray] = None
-    latency_s: float = 0.0
+    submit_s: float = 0.0        # wall-clock at submit()
+    admit_s: float = 0.0         # wall-clock when a slot was granted
+    finish_s: float = 0.0        # wall-clock at completion
+    latency_s: float = 0.0       # finish - submit (queue + service)
+
+
+def prompt_buckets(max_seq_len: int, min_bucket: int = 16) -> List[int]:
+    """Power-of-two prefill shapes: [min_bucket, ..., max_seq_len]."""
+    buckets = []
+    b = min_bucket
+    while b < max_seq_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_seq_len)
+    return buckets
+
+
+def bucket_for(n: int, buckets: List[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"prompt length {n} exceeds the largest bucket "
+                     f"{buckets[-1]}")
+
+
+def _path_endswith(path, name: str) -> bool:
+    return len(path) > 0 and getattr(path[-1], "key", None) == name
 
 
 class ServingEngine:
+    """Continuous-batching autoregressive serving."""
+
+    def __init__(self, lm: LM, params, *, batch_slots: int = 8,
+                 max_seq_len: int = 512, seed: int = 0,
+                 eos_id: Optional[int] = None, min_bucket: int = 16):
+        if lm.cfg.frontend.kind == "audio":
+            raise NotImplementedError("engine serves text-token streams")
+        self.lm = lm
+        self.params = params
+        self.batch_slots = batch_slots
+        self.max_seq_len = max_seq_len
+        self.eos_id = eos_id
+        self.buckets = prompt_buckets(max_seq_len, min_bucket)
+        self._queue: List[Request] = []
+        self._next_id = 0
+        self._rng = jax.random.PRNGKey(seed)
+        # perf counters (slot occupancy for bench_serving)
+        self.decode_steps = 0
+        self.occupied_slot_steps = 0
+        self.generated_tokens = 0
+
+        b, v = batch_slots, lm.cfg.padded_vocab
+        self._caches = self._empty_caches()
+        self._state = {
+            "last": jnp.zeros((b, v), jnp.float32),     # logits to sample next
+            "pos": jnp.zeros((b,), jnp.int32),
+            "steps": jnp.zeros((b,), jnp.int32),
+            "budget": jnp.zeros((b,), jnp.int32),
+            "temp": jnp.zeros((b,), jnp.float32),
+            "active": jnp.zeros((b,), jnp.bool_),
+            "out": jnp.zeros((b, max_seq_len), jnp.int32),
+        }
+        self._admit_fn = jax.jit(self._admit_impl)      # retraces per bucket
+        self._step_fn = jax.jit(self._step_impl)
+
+    # -- queue API ------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               temperature: float = 0.0) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        assert prompt.ndim == 1
+        if len(prompt) + max_new_tokens > self.max_seq_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
+                f" exceeds max_seq_len ({self.max_seq_len}); the output"
+                f" buffer and cache are sized for max_seq_len")
+        rid = self._next_id
+        self._next_id += 1
+        r = Request(rid, prompt, max_new_tokens, temperature)
+        r.submit_s = time.perf_counter()
+        self._queue.append(r)
+        return rid
+
+    def run(self) -> Dict[int, Request]:
+        """Serve until the queue and all slots drain."""
+        done: Dict[int, Request] = {}
+        slots: Dict[int, Request] = {}
+        free = list(range(self.batch_slots))
+        while self._queue or slots:
+            while free and self._queue:
+                self._admit(self._queue.pop(0), free.pop(), slots)
+            self._decode_round(slots, free, done)
+        return done
+
+    # -- device-side programs -------------------------------------------------
+    def _admit_impl(self, params, caches, state, tokens, length, slot,
+                    max_new, temp):
+        """Prefill one bucketed prompt and install it into ``slot``."""
+        logits, one_caches = self.lm.prefill(
+            params, {"tokens": tokens}, cache_width=self.max_seq_len)
+        last = jax.lax.dynamic_index_in_dim(logits[0], length - 1, axis=0,
+                                            keepdims=False)
+        caches = jax.tree.map(
+            lambda g, c: jax.lax.dynamic_update_index_in_dim(
+                g, c[:, 0], slot, axis=1),
+            caches, one_caches)
+        state = dict(state)
+        state["last"] = state["last"].at[slot].set(last.astype(jnp.float32))
+        state["pos"] = state["pos"].at[slot].set(length)
+        state["steps"] = state["steps"].at[slot].set(0)
+        state["budget"] = state["budget"].at[slot].set(max_new)
+        state["temp"] = state["temp"].at[slot].set(temp)
+        state["active"] = state["active"].at[slot].set(max_new > 0)
+        return caches, state
+
+    def _step_impl(self, params, caches, state, rng):
+        """Fused decode step: sample → append → done-detect, on device."""
+        active = state["active"]
+        nxt = sample_logits_batch(rng, state["last"], state["temp"])
+        rows = jnp.arange(self.batch_slots)
+        idx = jnp.clip(state["steps"], 0, self.max_seq_len - 1)
+        out = state["out"].at[rows, idx].set(
+            jnp.where(active, nxt, state["out"][rows, idx]))
+        steps = state["steps"] + active.astype(jnp.int32)
+        feed = jnp.where(active, nxt, 0)[:, None]
+        logits, caches = self.lm.decode_step(params, caches, feed,
+                                             state["pos"])
+        finished = steps >= state["budget"]
+        if self.eos_id is not None:
+            finished |= nxt == self.eos_id
+        state = {
+            "last": logits[:, 0, :].astype(jnp.float32),
+            "pos": state["pos"] + active.astype(jnp.int32),
+            "steps": steps,
+            "budget": state["budget"],
+            "temp": state["temp"],
+            "active": active & ~finished,
+            "out": out,
+        }
+        return caches, state
+
+    # -- host-side management -------------------------------------------------
+    def _admit(self, r: Request, slot: int, slots: Dict[int, Request]):
+        length = len(r.prompt)
+        bucket = bucket_for(length, self.buckets)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :length] = r.prompt                    # right-pad (exact)
+        self._caches, self._state = self._admit_fn(
+            self.params, self._caches, self._state, jnp.asarray(tokens),
+            jnp.int32(length), jnp.int32(slot), jnp.int32(r.max_new_tokens),
+            jnp.float32(r.temperature))
+        r.admit_s = time.perf_counter()
+        slots[slot] = r
+
+    def _decode_round(self, slots, free, done):
+        if not slots:
+            return
+        self._rng, k = jax.random.split(self._rng)
+        self._caches, self._state = self._step_fn(
+            self.params, self._caches, self._state, k)
+        self.decode_steps += 1
+        self.occupied_slot_steps += len(slots)
+        active = np.asarray(self._state["active"])       # the one host sync
+        for slot in [s for s, _ in slots.items() if not active[s]]:
+            r = slots.pop(slot)
+            n = int(self._state["steps"][slot])
+            r.output = np.asarray(self._state["out"][slot, :n])
+            r.finish_s = time.perf_counter()
+            r.latency_s = r.finish_s - r.submit_s
+            self.generated_tokens += n
+            free.append(slot)
+            done[r.request_id] = r
+
+    def _empty_caches(self):
+        """A batch_slots-wide cache pytree structurally identical to what
+        ``prefill`` returns (so admission can tree.map-scatter into it)."""
+        proto = jax.eval_shape(
+            lambda p, t: self.lm.prefill(p, {"tokens": t},
+                                         cache_width=self.max_seq_len)[1],
+            self.params,
+            jax.ShapeDtypeStruct((1, self.buckets[0]), jnp.int32))
+        b = self.batch_slots
+
+        def leaf(path, a):
+            shape = (a.shape[0], b) + a.shape[2:]
+            if _path_endswith(path, "pos"):
+                return jnp.full(shape, -1, a.dtype)      # -1 = empty slot
+            return jnp.zeros(shape, a.dtype)
+
+        return jax.tree_util.tree_map_with_path(leaf, proto)
+
+    # -- stats ----------------------------------------------------------------
+    def occupancy(self) -> float:
+        return self.occupied_slot_steps / max(
+            self.decode_steps * self.batch_slots, 1)
+
+
+class DrainBatchEngine:
+    """The previous static batcher, kept as the measured baseline: drain the
+    queue in fixed batches padded to the longest prompt (one prefill compile
+    per distinct length), decode everyone for the longest budget, and sample
+    on the host every token."""
+
     def __init__(self, lm: LM, params, *, batch_slots: int = 8,
                  max_seq_len: int = 512, seed: int = 0):
+        if lm.cfg.frontend.kind == "audio":
+            raise NotImplementedError("engine serves text-token streams")
         self.lm = lm
         self.params = params
         self.batch_slots = batch_slots
@@ -39,27 +255,25 @@ class ServingEngine:
         self.rng = jax.random.PRNGKey(seed)
         self._queue: List[Request] = []
         self._next_id = 0
+        self.generated_tokens = 0
 
         def prefill(params, batch):
             return lm.prefill(params, batch, cache_width=max_seq_len)
 
-        def decode(params, caches, tokens, cur_pos):
-            return lm.decode_step(params, caches, tokens, cur_pos)
-
         self.prefill_fn = jax.jit(prefill)
-        self.decode_fn = jax.jit(decode)
+        self.decode_fn = jax.jit(lm.decode_step)
 
-    # -- queue API --------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                temperature: float = 0.0) -> int:
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                   max_new_tokens, temperature))
+        r = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
+                    temperature)
+        r.submit_s = time.perf_counter()
+        self._queue.append(r)
         return rid
 
     def run(self) -> Dict[int, Request]:
-        """Drain the queue in batches of ``batch_slots``."""
         done: Dict[int, Request] = {}
         while self._queue:
             batch = self._queue[:self.batch_slots]
@@ -69,28 +283,34 @@ class ServingEngine:
                 done[r.request_id] = r
         return done
 
-    # -- internals ----------------------------------------------------------------
     def _serve_batch(self, requests: List[Request]) -> None:
-        t0 = time.time()
         b = self.batch_slots
         plen = max(len(r.prompt) for r in requests)
+        lens = np.array([len(r.prompt) for r in requests]
+                        + [plen] * (b - len(requests)), np.int32)
         tokens = np.zeros((b, plen), np.int32)
         for i, r in enumerate(requests):
-            tokens[i, plen - len(r.prompt):] = r.prompt   # left-pad
-        logits, caches = self.prefill_fn(self.params, {"tokens": jnp.asarray(tokens)})
-        last = logits[:, -1, :]
+            tokens[i, :len(r.prompt)] = r.prompt         # right-pad (exact)
+        logits, caches = self.prefill_fn(self.params,
+                                         {"tokens": jnp.asarray(tokens)})
+        last = jnp.take_along_axis(
+            logits, jnp.asarray(lens)[:, None, None] - 1, axis=1)[:, 0, :]
         max_new = max(r.max_new_tokens for r in requests)
         outs = np.zeros((b, max_new), np.int32)
-        temp = requests[0].temperature
+        pos = jnp.asarray(lens)
+        temp = jnp.asarray([r.temperature for r in requests]
+                           + [0.0] * (b - len(requests)), jnp.float32)
         for t in range(max_new):
             self.rng, k = jax.random.split(self.rng)
-            nxt = sample_logits(k, last, temperature=temp)
-            outs[:, t] = np.asarray(nxt)[:b]
-            step_tokens = jnp.asarray(nxt)[:, None]
-            logits1, caches = self.decode_fn(self.params, caches, step_tokens,
-                                             jnp.int32(plen + t))
+            nxt = sample_logits_batch(k, last, temp)
+            outs[:, t] = np.asarray(nxt)[:b]             # per-token host trip
+            logits1, caches = self.decode_fn(self.params, caches,
+                                             nxt[:, None], pos)
+            pos = pos + 1
             last = logits1[:, 0, :]
-        dt = time.time() - t0
+        finish = time.perf_counter()
         for i, r in enumerate(requests):
             r.output = outs[i, :r.max_new_tokens]
-            r.latency_s = dt
+            r.finish_s = finish
+            r.latency_s = finish - r.submit_s
+            self.generated_tokens += r.max_new_tokens

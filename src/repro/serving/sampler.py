@@ -15,3 +15,22 @@ def sample_logits(rng, logits, *, temperature: float = 0.0,
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -1e30, logits)
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_logits_batch(rng, logits, temperature, *,
+                        top_k: int = 0) -> jnp.ndarray:
+    """Vectorized sampling with per-row temperature (continuous batching
+    serves requests with different temperatures in one step).
+
+    logits: (B, V); temperature: (B,) with 0 = greedy per row. Traced-safe
+    (no python branching on temperature), so it lives inside the engine's
+    fused decode step.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32)
+    if top_k and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)

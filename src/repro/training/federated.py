@@ -15,7 +15,16 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
-from jax import shard_map
+try:                             # moved to the jax top level in newer jax
+    from jax import shard_map
+except ImportError:              # pragma: no cover - jax<0.5 fallback
+    from jax.experimental.shard_map import shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma
+import inspect as _inspect
+_SM_CHECK = ({"check_vma": False}
+             if "check_vma" in _inspect.signature(shard_map).parameters
+             else {"check_rep": False})
 
 from repro.optim import sgd_init, sgd_update
 
@@ -68,7 +77,7 @@ class FederatedTrainer:
                 local, mesh=self.mesh,
                 in_specs=(spec_leading, spec_leading, spec_leading),
                 out_specs=(spec_leading, spec_leading, spec_leading),
-                check_vma=False,
+                **_SM_CHECK,
             )(params, opt, batch)
 
         return jax.jit(fed_round)

@@ -45,6 +45,8 @@ SCRIPT = textwrap.dedent("""
             lowered = jitted.lower(*abstract_in)
         compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
     coll = collective_bytes(compiled.as_text())
     print(json.dumps({
         "flops": cost.get("flops"),

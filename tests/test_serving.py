@@ -49,6 +49,77 @@ def test_serving_engine_batches_and_completes():
         assert r.latency_s > 0
 
 
+def test_continuous_matches_drain_batch():
+    """Mixed-length prompts with different decode budgets must generate
+    exactly the same greedy tokens on the continuous-batching engine as on
+    the drain-batch baseline (bucketing/right-padding is output-exact)."""
+    from repro.serving import DrainBatchEngine, ServingEngine
+    cfg = _tiny_cfg()
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, 100, size=int(rng.integers(3, 12))),
+             int(rng.integers(3, 9))) for _ in range(7)]
+    cont = ServingEngine(lm, params, batch_slots=3, max_seq_len=32,
+                         min_bucket=4)
+    drain = DrainBatchEngine(lm, params, batch_slots=3, max_seq_len=32)
+    for prompt, max_new in reqs:
+        cont.submit(prompt, max_new_tokens=max_new)
+        drain.submit(prompt, max_new_tokens=max_new)
+    dc, dd = cont.run(), drain.run()
+    assert set(dc) == set(dd)
+    for rid in dc:
+        assert dc[rid].output.shape == (reqs[rid][1],)
+        np.testing.assert_array_equal(dc[rid].output, dd[rid].output)
+    # more requests than slots -> slots were reused
+    assert cont.decode_steps < sum(mn for _, mn in reqs)
+    assert 0.0 < cont.occupancy() <= 1.0
+
+
+def test_continuous_engine_eos_stops_early():
+    from repro.serving import ServingEngine
+    cfg = _tiny_cfg()
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    probe = ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                          min_bucket=4)
+    probe.submit(np.arange(5), max_new_tokens=8)
+    first = int(probe.run()[0].output[0])    # greedy first token
+    eng = ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                        min_bucket=4, eos_id=first)
+    eng.submit(np.arange(5), max_new_tokens=8)
+    out = eng.run()[0].output
+    assert len(out) == 1 and int(out[0]) == first
+
+
+def test_cascade_serving_engine_routes_and_generates():
+    from repro.cascade.ecc_infer import CascadeLM, edge_variant
+    from repro.cascade.gate import make_thresholds
+    from repro.serving import CascadeServingEngine
+    cloud_cfg = _tiny_cfg()
+    edge_cfg = edge_variant(cloud_cfg, layers=1)
+    cloud, edge = LM(cloud_cfg, kv_chunk=8), LM(edge_cfg, kv_chunk=8)
+    cp, _ = cloud.init(jax.random.PRNGKey(0))
+    ep, _ = edge.init(jax.random.PRNGKey(1))
+    # mid-band thresholds so an untrained draft exercises several routes
+    cascade = CascadeLM(edge, cloud,
+                        thresholds=make_thresholds(hi=0.01, lo=0.001))
+    eng = CascadeServingEngine(cascade, ep, cp, batch_slots=2,
+                               max_seq_len=32)
+    rng = np.random.default_rng(0)
+    ids = [eng.submit(rng.integers(0, 100, size=4 + i), max_new_tokens=3)
+           for i in range(5)]
+    done = eng.run()
+    assert set(done) == set(ids)
+    m = eng.metrics
+    assert m.queries == 5
+    assert m.accepted + m.dropped + m.escalated == 5
+    for r in done.values():
+        assert r.route in ("accept", "escalate", "drop")
+        expected = 0 if r.route == "drop" else 3
+        assert r.output is not None and len(r.output) == expected
+
+
 def test_cascade_engine_metrics():
     from repro.cascade.ecc_infer import CascadeLM, edge_variant
     from repro.serving import CascadeEngine

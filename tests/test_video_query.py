@@ -65,3 +65,32 @@ def test_crop_bank_calibration():
     # escalation band is a meaningful fraction, not degenerate
     esc = ((conf >= 0.1) & (conf < 0.8)).mean()
     assert 0.1 < esc < 0.6
+
+
+def test_engine_calibrated_servers():
+    """The ACE application runs on the serving layer: EOC/COC service rates
+    come from a measured continuous-batching engine."""
+    import jax
+    import numpy as np
+    from repro.configs.base import ModelConfig, dense_stages
+    from repro.core.video_query import calibrate_server_from_engine
+    from repro.models.model import LM
+    from repro.serving import ServingEngine
+
+    cfg = ModelConfig(
+        name="tiny", family="dense", source="t", num_layers=2, d_model=32,
+        num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64,
+        stages=dense_stages(2), param_dtype="float32")
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                        min_bucket=16)
+    cal = calibrate_server_from_engine(eng, n_queries=3, prompt_len=8,
+                                       max_new=2)
+    assert cal["service_s"] > 0 and cal["tokens_s"] > 0
+    assert cal["workers"] == 2
+
+    vq = config()
+    out = run_video_query(vq, paradigm="ace", frame_interval_s=0.5,
+                          wan_delay_ms=50.0, duration_s=5.0, coc_engine=eng)
+    assert out["crops"] > 0 and 0.0 <= out["f1"] <= 1.0
