@@ -1,16 +1,25 @@
-"""Serving benchmark: continuous batching vs the drain-batch baseline.
+"""Serving benchmark: continuous batching vs the drain-batch baseline, and
+ring vs paged KV-cache backends at a fixed HBM budget.
 
 A Poisson arrival trace of mixed-length prompts with varied decode budgets
 (more prompts than slots — the regime the drain batcher is worst at: every
 batch pads to its longest prompt, recompiles per length, and decodes
 everyone for the longest budget). Reports tokens/s, p50/p99 per-request
-latency, and slot occupancy; ``run.py`` dumps the comparison to
-``BENCH_serving.json`` so the perf trajectory is machine-readable.
+latency, slot occupancy, and per-slot HBM; ``run.py`` dumps the comparison
+to ``BENCH_serving.json`` so the perf trajectory is machine-readable.
+
+The paged section answers the capacity question: holding KV HBM fixed at
+exactly what the ring engine's ``slots`` cache lines cost, how many
+requests can run concurrently when admission reserves blocks for live
+tokens instead of worst-case ``max_seq_len`` lines?
 
     PYTHONPATH=src python -m benchmarks.run --only serving
+    PYTHONPATH=src python -m benchmarks.bench_serving --cache-backend paged
+    PYTHONPATH=src python -m benchmarks.bench_serving --smoke
 """
 from __future__ import annotations
 
+import argparse
 import time
 from typing import List, Tuple
 
@@ -19,7 +28,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, dense_stages
 from repro.models.model import LM
-from repro.serving import DrainBatchEngine, ServingEngine
+from repro.serving import DrainBatchEngine, PagedCache, ServingEngine
 
 
 def _model() -> Tuple[LM, dict]:
@@ -73,12 +82,48 @@ def _drive(engine, trace) -> dict:
     }
 
 
-def run_comparison(n_requests: int = 24, slots: int = 4,
-                   seed: int = 0) -> dict:
+def _warm_buckets(engine):
+    """The bucketed engine's compile set is finite: warm every bucket once
+    (steady-state serving never recompiles again)."""
+    for bucket in engine.buckets:
+        engine.submit(np.zeros(bucket - 2, np.int32), max_new_tokens=2)
+    engine.run()
+
+
+def _continuous(lm, params, trace, *, slots: int, max_seq_len: int,
+                cache_backend: str = "ring", **backend_kw) -> dict:
+    eng = ServingEngine(lm, params, batch_slots=slots,
+                        max_seq_len=max_seq_len, min_bucket=8,
+                        cache_backend=cache_backend, **backend_kw)
+    _warm_buckets(eng)
+    # measure only the trace: warm-up admissions must not pollute the
+    # per-slot HBM average, the peak-concurrency figures, or occupancy
+    eng.peak_active_slots = 0
+    eng.decode_steps = 0
+    eng.occupied_slot_steps = 0
+    eng.generated_tokens = 0
+    if hasattr(eng.backend, "reset_stats"):
+        eng.backend.reset_stats()
+    stats = _drive(eng, trace)
+    stats["occupancy"] = round(eng.occupancy(), 4)
+    stats["decode_steps"] = eng.decode_steps
+    stats["peak_active_slots"] = eng.peak_active_slots
+    stats["hbm_bytes"] = eng.hbm_bytes()
+    stats["hbm_bytes_per_slot"] = round(eng.backend.hbm_bytes_per_slot(), 1)
+    return stats
+
+
+def run_comparison(n_requests: int = 24, slots: int = 4, seed: int = 0,
+                   max_seq_len: int = 128, block_size: int = 8,
+                   cache_backend: str = "ring") -> dict:
+    # block_size 8 (the f32 sublane minimum) packs this short-request
+    # workload tightest; larger blocks trade internal fragmentation for
+    # fewer, bigger DMAs
     lm, params = _model()
     trace = poisson_trace(n_requests, seed=seed)
 
-    drain = DrainBatchEngine(lm, params, batch_slots=slots, max_seq_len=128)
+    drain = DrainBatchEngine(lm, params, batch_slots=slots,
+                             max_seq_len=max_seq_len)
     # warm what can be warmed: the decode step and one prefill shape. The
     # baseline's remaining prefill compiles are per-batch-length and cannot
     # be pre-warmed — that unbounded shape set is exactly its pathology.
@@ -86,23 +131,39 @@ def run_comparison(n_requests: int = 24, slots: int = 4,
     drain.run()
     baseline = _drive(drain, trace)
 
-    cont = ServingEngine(lm, params, batch_slots=slots, max_seq_len=128,
-                         min_bucket=8)
-    # the bucketed engine's compile set is finite: warm every bucket once
-    # (steady-state serving never recompiles again)
-    for bucket in cont.buckets:
-        cont.submit(np.zeros(bucket - 2, np.int32), max_new_tokens=2)
-    cont.run()
-    continuous = _drive(cont, trace)
-    continuous["occupancy"] = round(cont.occupancy(), 4)
-    continuous["decode_steps"] = cont.decode_steps
+    continuous = _continuous(lm, params, trace, slots=slots,
+                             max_seq_len=max_seq_len,
+                             cache_backend=cache_backend,
+                             **({"block_size": block_size}
+                                if cache_backend == "paged" else {}))
+
+    # paged at fixed HBM: size the pool within the *ring* engine's KV budget
+    # for `slots` slots (computed independently of which backend the
+    # continuous section ran) and let admission — blocks, not cache lines —
+    # bound concurrency; the slot count is raised so it never binds
+    from repro.serving import RingCache
+    ring_hbm = RingCache(lm, params, batch_slots=slots,
+                         max_seq_len=max_seq_len).hbm_bytes()
+    probe = PagedCache(lm, params, batch_slots=slots,
+                       max_seq_len=max_seq_len, block_size=block_size)
+    pool_blocks = ring_hbm // probe.block_bytes()  # total incl. trash block
+    paged = _continuous(lm, params, trace, slots=4 * slots,
+                        max_seq_len=max_seq_len, cache_backend="paged",
+                        block_size=block_size, num_pool_blocks=pool_blocks)
+    paged["ring_hbm_budget"] = int(ring_hbm)
+    paged["pool_blocks"] = int(pool_blocks)
+    paged["block_size"] = block_size
+    paged["slot_scaling_vs_ring"] = round(
+        paged["peak_active_slots"] / slots, 2)
 
     return {
         "workload": {"requests": n_requests, "slots": slots,
                      "arrival": "poisson", "prompt_len": "U[5,64]",
-                     "max_new": "choice(2,8,32)"},
+                     "max_new": "choice(2,8,32)",
+                     "max_seq_len": max_seq_len},
         "baseline_drain_batch": baseline,
         "continuous_batching": continuous,
+        "paged_fixed_hbm": paged,
         "speedup_tokens_per_s": round(
             continuous["tokens_per_s"] / baseline["tokens_per_s"], 2),
     }
@@ -111,7 +172,8 @@ def run_comparison(n_requests: int = 24, slots: int = 4,
 def run() -> List[tuple]:
     res = run_comparison()
     rows = []
-    for name in ("baseline_drain_batch", "continuous_batching"):
+    for name in ("baseline_drain_batch", "continuous_batching",
+                 "paged_fixed_hbm"):
         r = res[name]
         us = r["wall_s"] / max(r["generated_tokens"], 1) * 1e6
         rows.append((f"serving/{name}/r{r['requests']}", us,
@@ -119,5 +181,50 @@ def run() -> List[tuple]:
                      f"p50_s={r['p50_latency_s']};p99_s={r['p99_latency_s']}"))
     rows.append(("serving/speedup", 0.0,
                  f"tokens_s_ratio={res['speedup_tokens_per_s']}"))
+    rows.append(("serving/paged_slot_scaling", 0.0,
+                 f"peak_slots_ratio="
+                 f"{res['paged_fixed_hbm']['slot_scaling_vs_ring']}"))
     run.last_result = res          # run.py picks this up for the JSON dump
     return rows
+
+
+def smoke() -> dict:
+    """CI smoke: a tiny trace through both backends; asserts progress."""
+    lm, params = _model()
+    trace = poisson_trace(6, seed=0, max_prompt=24, budgets=(2, 4))
+    out = {}
+    for backend in ("ring", "paged"):
+        eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=64,
+                            min_bucket=8, cache_backend=backend)
+        stats = _drive(eng, trace)
+        assert stats["generated_tokens"] > 0, backend
+        assert stats["tokens_per_s"] > 0, backend
+        out[backend] = stats
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cache-backend", choices=("ring", "paged"),
+                    default="ring",
+                    help="backend for the continuous_batching section (the "
+                         "paged_fixed_hbm section always runs paged)")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI: assert tokens/s > 0 and exit")
+    args = ap.parse_args()
+    if args.smoke:
+        for backend, stats in smoke().items():
+            print(f"smoke/{backend}: tokens_s={stats['tokens_per_s']}")
+        return
+    import json
+    res = run_comparison(n_requests=args.requests, slots=args.slots,
+                         block_size=args.block_size,
+                         cache_backend=args.cache_backend)
+    print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

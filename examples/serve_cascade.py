@@ -3,8 +3,9 @@ workload): an edge draft model answers one-shot queries; the BP confidence
 gate escalates uncertain ones to the cloud model; the compacted variant
 bounds cloud compute + boundary bytes.
 
-    PYTHONPATH=src python examples/serve_cascade.py
+    PYTHONPATH=src python examples/serve_cascade.py [--cache-backend paged]
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -20,6 +21,13 @@ from repro.serving import CascadeEngine, CascadeServingEngine, ServingEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache-backend", choices=("ring", "paged"),
+                    default="ring",
+                    help="KV-cache backend for the serving engines: 'paged' "
+                         "reserves pool blocks per request instead of a "
+                         "max_seq_len ring per slot")
+    args = ap.parse_args()
     cloud_cfg = get_config("smollm-135m").reduced()
     edge_cfg = edge_variant(cloud_cfg, layers=1)
     cloud, edge = LM(cloud_cfg, kv_chunk=32), LM(edge_cfg, kv_chunk=32)
@@ -45,20 +53,22 @@ def main():
     # continuous-batching autoregressive serving: 8 mixed-length requests
     # share 4 slots; new requests slide in as short ones finish
     eng = ServingEngine(cloud, cp, batch_slots=4, max_seq_len=64,
-                        min_bucket=8)
+                        min_bucket=8, cache_backend=args.cache_backend)
     for i in range(8):
         eng.submit(rng.integers(0, 100, size=5 + 3 * i),
                    max_new_tokens=4 + 2 * i)
     done = eng.run()
-    print(f"\ncontinuous-batching engine served {len(done)} requests in "
-          f"{eng.decode_steps} decode steps "
-          f"(occupancy {eng.occupancy():.0%}), e.g. "
+    print(f"\ncontinuous-batching engine [{args.cache_backend}] served "
+          f"{len(done)} requests in {eng.decode_steps} decode steps "
+          f"(occupancy {eng.occupancy():.0%}, "
+          f"KV HBM {eng.hbm_bytes() / 1024:.0f} KiB), e.g. "
           f"req0 -> {done[0].output.tolist()}")
 
     # generative cascade: the edge gate routes each prompt, generation runs
     # on the routed continuous-batching engine
     gen = CascadeServingEngine(CascadeLM(edge, cloud, thresholds=th),
-                               ep, cp, batch_slots=4, max_seq_len=64)
+                               ep, cp, batch_slots=4, max_seq_len=64,
+                               cache_backend=args.cache_backend)
     for i in range(8):
         gen.submit(rng.integers(0, 100, size=6 + i), max_new_tokens=6)
     routed = gen.run()

@@ -2,7 +2,9 @@
 and of the cascade itself (DESIGN.md §3).
 
   flash_attention  — blockwise causal/sliding-window attention (GQA)
-  decode_attention — single-token decode attention over a ring KV cache
+  decode_attention — single-token decode attention over a ring KV cache,
+                     plus the paged (block-table) variant used by the
+                     serving engine's paged KV backend
   rglru_scan       — blocked RG-LRU linear-recurrence scan
   cascade_gate     — fused confidence-gate + route-count reduction
 

@@ -1,5 +1,5 @@
-"""Decode-attention Pallas kernel — single-token queries against a ring
-KV cache (causal, sliding-window, GQA).
+"""Decode-attention Pallas kernels — single-token queries against a ring
+KV cache or a paged (block-table) KV pool (causal, sliding-window, GQA).
 
 This is the memory-bound half of serving: every decode step streams the
 whole cache through the core once per layer, so the kernel's job is to keep
@@ -135,5 +135,127 @@ def decode_attention(q, k, v, q_pos, k_pos, *, window: Optional[int] = None,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qg, k, v, qp, kp)
+    out = out.reshape(b, h, hd)
+    return out[:, None] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-table) variant
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float,
+                  window: Optional[int], num_k: int):
+    ib, ik = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                           # (G, hd)
+    k = k_ref[0, :, 0, :]                     # (bs, hd) — gathered pool block
+    v = v_ref[0, :, 0, :]
+    qp = qpos_ref[0, 0]                       # scalar: this request's position
+    kp = kpos_ref[0:1, :]                     # (1, bs) per-token positions
+    blk = bt_ref[ib, ik]                      # physical block id; −1 = hole
+
+    valid = (kp >= 0) & (kp <= qp) & (blk >= 0)
+    if window is not None:
+        valid &= kp > (qp - window)
+
+    # skip unallocated table entries and fully-masked blocks entirely: a
+    # slot's table only covers its live tokens, so grid steps past the
+    # allocated prefix cost no MXU work
+    @pl.when(jnp.any(valid))
+    def _compute():
+        s = jax.lax.dot_general(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (G, bs)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_k - 1)
+    def _flush():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k, v, q_pos, k_pos, block_tables, *,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           interpret: bool = False):
+    """Paged decode attention: gather K/V through a block table per grid step.
+
+    q: (B, 1, H, hd) or (B, H, hd); k, v: (N, bs, KV, hd) global block pool
+    (block 0 is the engines' trash block); k_pos: (N, bs) per-token positions
+    (−1 = never written); block_tables: (B, M) int32 physical block ids per
+    slot (−1 = unallocated). Returns attention output shaped like q.
+
+    Same streaming-softmax carry, GQA group folding and masked-block skip as
+    the ring kernel; the only difference is that the KV tile for grid step
+    ``ik`` is DMA'd from pool block ``block_tables[b, ik]`` (scalar-prefetch
+    index map) instead of a contiguous slice of a per-slot ring.
+    """
+    squeeze = q.ndim == 4
+    if squeeze:
+        assert q.shape[1] == 1, "decode kernel takes a single query token"
+        q = q[:, 0]
+    b, h, hd = q.shape
+    n, bs, kv = k.shape[0], k.shape[1], k.shape[2]
+    assert h % kv == 0
+    g = h // kv
+    m = block_tables.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+
+    qg = q.reshape(b, kv, g, hd)
+    qp = jnp.asarray(q_pos, jnp.int32).reshape(b, 1)
+    kp = jnp.asarray(k_pos, jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               num_k=m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, ik, bt_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b_, h_, ik, bt_: (
+                             jnp.maximum(bt_[b_, ik], 0), 0, h_, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b_, h_, ik, bt_: (
+                             jnp.maximum(bt_[b_, ik], 0), 0, h_, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, ik, bt_: (b_, 0)),
+            pl.BlockSpec((1, bs), lambda b_, h_, ik, bt_: (
+                jnp.maximum(bt_[b_, ik], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b_, h_, ik, bt_: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, qg, k, v, qp, kp)
     out = out.reshape(b, h, hd)
     return out[:, None] if squeeze else out

@@ -15,6 +15,8 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.cascade_gate import cascade_gate as _gate_kernel
 from repro.kernels.decode_attention import decode_attention as _da_kernel
+from repro.kernels.decode_attention import (paged_decode_attention
+                                            as _pda_kernel)
 from repro.kernels.flash_attention import flash_attention as _fa_kernel
 from repro.kernels.rglru_scan import rglru_scan as _rglru_kernel
 
@@ -50,6 +52,27 @@ def decode_attn(q, k, v, q_pos, k_pos, *, window: Optional[int] = None,
                           else interpret)
     return _ref.decode_attention_ref(q, k, v, q_pos, k_pos, window=window,
                                      scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale",
+                                             "use_kernel", "interpret"))
+def paged_decode_attn(q, k, v, q_pos, k_pos, block_tables, *,
+                      window: Optional[int] = None,
+                      scale: Optional[float] = None,
+                      use_kernel: Optional[bool] = None,
+                      interpret: Optional[bool] = None):
+    """Paged-pool variant of ``decode_attn``: k/v/k_pos are the global block
+    pool (N, bs, ...) and ``block_tables`` (B, M) maps each slot's logical
+    blocks to physical pool blocks (−1 = unallocated)."""
+    use = _on_tpu() if use_kernel is None else use_kernel
+    if use:
+        return _pda_kernel(q, k, v, q_pos, k_pos, block_tables,
+                           window=window, scale=scale,
+                           interpret=not _on_tpu() if interpret is None
+                           else interpret)
+    return _ref.paged_decode_attention_ref(q, k, v, q_pos, k_pos,
+                                           block_tables, window=window,
+                                           scale=scale)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))

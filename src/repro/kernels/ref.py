@@ -75,6 +75,51 @@ def decode_attention_ref(q, k, v, q_pos, k_pos, *,
     return o[:, None] if squeeze else o
 
 
+def gather_paged_kv(pool, pos, block_tables):
+    """Flatten a paged pool into per-slot contiguous context.
+
+    pool: (N, bs, ...) block pool; pos: (N, bs) per-token positions;
+    block_tables: (B, M) physical ids (−1 = unallocated). Returns
+    (ctx (B, M*bs, ...), ctx_pos (B, M*bs)) where unallocated table entries
+    carry pos −1 (fully masked), so downstream attention over the gathered
+    context is exact regardless of holes in the table.
+    """
+    bt = jnp.asarray(block_tables, jnp.int32)
+    safe = jnp.maximum(bt, 0)
+    b, m = bt.shape
+    bs = pool.shape[1]
+    ctx = pool[safe]                                  # (B, M, bs, ...)
+    ctx = ctx.reshape((b, m * bs) + pool.shape[2:])
+    ctx_pos = jnp.where(bt[:, :, None] >= 0, pos[safe], -1)
+    return ctx, ctx_pos.reshape(b, m * bs)
+
+
+def paged_decode_attention_ref(q, k, v, q_pos, k_pos, block_tables, *,
+                               window: Optional[int] = None,
+                               scale: Optional[float] = None) -> jnp.ndarray:
+    """Dense single-token decode attention over a paged KV pool.
+
+    q: (B, 1, H, hd) or (B, H, hd); k, v: (N, bs, KV, hd) global block pool;
+    q_pos: (B,); k_pos: (N, bs) with −1 marking never-written tokens;
+    block_tables: (B, M) with −1 marking unallocated entries. The contract:
+    gathering each slot's blocks into a contiguous cache and running the
+    ring oracle must equal the paged Pallas kernel.
+    """
+    kc, pc = gather_paged_kv(k, k_pos, block_tables)
+    vc, _ = gather_paged_kv(v, k_pos, block_tables)
+    out = decode_attention_ref(q, kc, vc, q_pos, pc, window=window,
+                               scale=scale)
+    # a freed slot's table is all −1: nothing is valid, and the kernel's
+    # streaming accumulator stays zero — pin the oracle to the same value
+    # instead of the dense softmax's uniform-over-garbage row
+    valid = (pc >= 0) & (pc <= q_pos[:, None])
+    if window is not None:
+        valid &= pc > (q_pos[:, None] - window)
+    any_valid = jnp.any(valid, axis=1)
+    shape = (q.shape[0],) + (1,) * (out.ndim - 1)
+    return jnp.where(any_valid.reshape(shape), out, 0).astype(out.dtype)
+
+
 def rglru_scan_ref(a, b, h0) -> tuple:
     """h_t = a_t * h_{t-1} + b_t. a, b: (B, S, W) f32; h0: (B, W).
     Returns (h (B,S,W), h_last (B,W))."""

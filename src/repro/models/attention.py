@@ -299,17 +299,18 @@ def positions_1d(cur_pos, batch: int) -> jnp.ndarray:
     return jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (batch,))
 
 
+def _ring_layout():
+    """The default cache layout. Imported lazily: the layout/backend API
+    lives in ``repro.serving.kv_cache`` (engine-facing), and this module is
+    imported while that package initializes."""
+    from repro.serving.kv_cache import RING
+    return RING
+
+
 def cache_write(cache: dict, k1, v1, cur_pos) -> dict:
     """Write one step (B, 1, KV, hd) at per-request ring slot
     ``cur_pos % width``. ``cur_pos``: scalar or (B,)."""
-    b, width = cache["k"].shape[0], cache["k"].shape[1]
-    cur = positions_1d(cur_pos, b)
-    slot = cur % width
-    rows = jnp.arange(b)
-    k = cache["k"].at[rows, slot].set(k1[:, 0])
-    v = cache["v"].at[rows, slot].set(v1[:, 0])
-    pos = cache["pos"].at[rows, slot].set(cur)
-    return {"k": k, "v": v, "pos": pos}
+    return _ring_layout().append(cache, {"k": k1, "v": v1}, cur_pos)
 
 
 def cache_fill(cache: dict, k, v, seq_len: int) -> dict:
@@ -376,16 +377,20 @@ def attn_forward(params, cfg, x, positions, *, window: Optional[int],
     return y, (k, v)
 
 
-def attn_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int]):
-    """One-token decode. x: (B, 1, D); cache from ``init_kv_cache``;
-    ``cur_pos``: scalar or (B,) per-request positions."""
+def attn_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int],
+                layout=None, block_tables=None):
+    """One-token decode. x: (B, 1, D); ``cur_pos``: scalar or (B,) per-request
+    positions. ``layout`` is a KV-cache layout from
+    ``repro.serving.kv_cache`` (None = ring); for the paged layout ``cache``
+    is the (N, bs, ...) block pool and ``block_tables`` (B, M) maps each
+    request's logical blocks to pool blocks."""
+    layout = _ring_layout() if layout is None else layout
     b = x.shape[0]
     positions = positions_1d(cur_pos, b)[:, None]
     q, k1, v1 = _qkv(params, cfg, x, positions)
-    cache = cache_write(cache, k1, v1, cur_pos)
-    out = decode_attention(q, cache["k"], cache["v"], positions[:, 0],
-                           cache["pos"], window=window,
-                           scale=cfg.resolved_head_dim ** -0.5)
+    cache = layout.append(cache, {"k": k1, "v": v1}, cur_pos, block_tables)
+    out = layout.attend(q, cache, positions[:, 0], block_tables,
+                        window=window, scale=cfg.resolved_head_dim ** -0.5)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, cache
 
@@ -496,42 +501,41 @@ def mla_cache_fill(cache: dict, ckv, krope, seq_len: int) -> dict:
     return {"ckv": ckw, "krope": krw, "pos": pos}
 
 
-def mla_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int]):
+def mla_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int],
+               layout=None, block_tables=None):
     """Absorbed-form MLA decode: score/value math in the latent space, so the
     cache stays compressed (kv_lora + rope dims) — the paper-relevant memory
-    saving of MLA."""
+    saving of MLA. The attend runs over ``layout.context`` (identity for the
+    ring; a block-table gather for the paged layout), so both cache layouts
+    share one attention formulation."""
+    layout = _ring_layout() if layout is None else layout
     m = cfg.mla
     b = x.shape[0]
     cur = positions_1d(cur_pos, b)
     positions = cur[:, None]
     q_nope, q_rope = _mla_q(params, cfg, x, positions)          # (B,1,H,*)
     ckv1, krope1 = _mla_kv_latent(params, cfg, x, positions)    # (B,1,r)
-    # per-request ring-write
-    width = cache["ckv"].shape[1]
-    slot = cur % width
-    rows = jnp.arange(b)
-    cache = {
-        "ckv": cache["ckv"].at[rows, slot].set(ckv1[:, 0]),
-        "krope": cache["krope"].at[rows, slot].set(krope1[:, 0]),
-        "pos": cache["pos"].at[rows, slot].set(cur),
-    }
+    cache = layout.append(cache, {"ckv": ckv1, "krope": krope1}, cur_pos,
+                          block_tables)
+    ctx = layout.context(cache, block_tables)   # (B, C, ...) per-slot view
+    ckv_c, krope_c, pos_c = ctx["ckv"], ctx["krope"], ctx["pos"]
     # absorb W_uk into q: q_lat (B,H,r)
     q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["w_uk"])
     s_nope = jnp.einsum("bhr,bcr->bhc", q_lat,
-                        cache["ckv"].astype(q_lat.dtype),
+                        ckv_c.astype(q_lat.dtype),
                         preferred_element_type=jnp.float32)
     s_rope = jnp.einsum("bhk,bck->bhc", q_rope[:, 0],
-                        cache["krope"].astype(q_rope.dtype),
+                        krope_c.astype(q_rope.dtype),
                         preferred_element_type=jnp.float32)
     qk = m.qk_nope_head_dim + m.qk_rope_head_dim
     s = (s_nope + s_rope) * (qk ** -0.5)
-    valid = (cache["pos"] <= positions) & (cache["pos"] >= 0)
+    valid = (pos_c <= positions) & (pos_c >= 0)
     if window is not None:
-        valid &= cache["pos"] > (positions - window)
+        valid &= pos_c > (positions - window)
     s = jnp.where(valid[:, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bhc,bcr->bhr", p.astype(cache["ckv"].dtype),
-                       cache["ckv"], preferred_element_type=jnp.float32)
+    o_lat = jnp.einsum("bhc,bcr->bhr", p.astype(ckv_c.dtype),
+                       ckv_c, preferred_element_type=jnp.float32)
     out = jnp.einsum("bhr,rhk->bhk", o_lat.astype(x.dtype), params["w_uv"])
     y = jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None, :]
     return y, cache

@@ -121,16 +121,18 @@ def _block_forward(bdef: BlockDef, params, cfg, x, positions, *,
 
 
 def _block_decode(bdef: BlockDef, params, cfg, x1, cache, cur_pos, *,
-                  capacity_factor: float):
+                  capacity_factor: float, layout=None, block_tables=None):
     if bdef.mixer == ATTN:
         h = rmsnorm(params["norm1"], x1, cfg.rms_eps)
         y, cache = att.attn_decode(params["mixer"], cfg, h, cache, cur_pos,
-                                   window=bdef.window)
+                                   window=bdef.window, layout=layout,
+                                   block_tables=block_tables)
         x1 = x1 + y
     elif bdef.mixer == MLA:
         h = rmsnorm(params["norm1"], x1, cfg.rms_eps)
         y, cache = att.mla_decode(params["mixer"], cfg, h, cache, cur_pos,
-                                  window=bdef.window)
+                                  window=bdef.window, layout=layout,
+                                  block_tables=block_tables)
         x1 = x1 + y
     elif bdef.mixer == RGLRU:
         h = rmsnorm(params["norm1"], x1, cfg.rms_eps)
@@ -367,10 +369,13 @@ class LM:
             caches.append(stacked)
         return caches
 
-    def decode_step(self, params, caches, tokens, cur_pos):
+    def decode_step(self, params, caches, tokens, cur_pos, *,
+                    layout=None, block_tables=None):
         """One-token decode. tokens: (B, 1) (audio: (B, 1, C));
         ``cur_pos``: scalar or (B,) per-request positions (continuous
         batching decodes slots at different depths in one step).
+        ``layout``/``block_tables`` select the KV-cache layout
+        (``repro.serving.kv_cache``; None = per-slot ring caches).
         Returns (logits (B, 1, V...), new caches)."""
         cfg = self.cfg
         cur_pos = att.positions_1d(cur_pos, tokens.shape[0])
@@ -390,7 +395,8 @@ class LM:
                 for i, bdef in enumerate(_stage.blocks):
                     h, c = _block_decode(
                         bdef, layer_params[f"b{i}"], cfg, h, layer_cache[i],
-                        cur_pos, capacity_factor=self.capacity_factor)
+                        cur_pos, capacity_factor=self.capacity_factor,
+                        layout=layout, block_tables=block_tables)
                     new_layer.append(c)
                 return h, tuple(new_layer)
 

@@ -1,8 +1,12 @@
 from repro.serving.engine import (DrainBatchEngine, Request, ServingEngine,
-                                  bucket_for, prompt_buckets)
+                                  bucket_for, prompt_buckets, validate_prompt)
 from repro.serving.cascade_engine import CascadeEngine, CascadeServingEngine
+from repro.serving.kv_cache import (KVCacheBackend, PagedCache, PagedLayout,
+                                    RING, RingCache, RingLayout, make_backend)
 from repro.serving.sampler import sample_logits, sample_logits_batch
 
 __all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
            "CascadeServingEngine", "sample_logits", "sample_logits_batch",
-           "prompt_buckets", "bucket_for"]
+           "prompt_buckets", "bucket_for", "validate_prompt",
+           "KVCacheBackend", "RingCache", "PagedCache", "RingLayout",
+           "PagedLayout", "RING", "make_backend"]

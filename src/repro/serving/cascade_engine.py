@@ -87,16 +87,25 @@ class CascadeServingEngine:
 
     def __init__(self, cascade: CascadeLM, edge_params, cloud_params, *,
                  batch_slots: int = 8, max_seq_len: int = 256,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 cache_backend="ring", block_size: int = 16,
+                 num_pool_blocks: Optional[int] = None,
+                 truncate_prompts: bool = False):
         from repro.serving.engine import ServingEngine
         self.cascade = cascade
+        self.max_seq_len = max_seq_len
+        self.truncate_prompts = truncate_prompts
         self.metrics = CascadeMetrics()
         self.edge_engine = ServingEngine(
             cascade.edge, edge_params, batch_slots=batch_slots,
-            max_seq_len=max_seq_len, eos_id=eos_id, seed=seed)
+            max_seq_len=max_seq_len, eos_id=eos_id, seed=seed,
+            cache_backend=cache_backend, block_size=block_size,
+            num_pool_blocks=num_pool_blocks)
         self.cloud_engine = ServingEngine(
             cascade.cloud, cloud_params, batch_slots=batch_slots,
-            max_seq_len=max_seq_len, eos_id=eos_id, seed=seed + 1)
+            max_seq_len=max_seq_len, eos_id=eos_id, seed=seed + 1,
+            cache_backend=cache_backend, block_size=block_size,
+            num_pool_blocks=num_pool_blocks)
 
         def gate(params, tokens, length):
             # bucketed like engine prefill: right-padded, gate on the last
@@ -117,9 +126,15 @@ class CascadeServingEngine:
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                temperature: float = 0.0) -> int:
+        from repro.serving.engine import validate_prompt
+        # validate here (not at gate time): the gate prefills through the
+        # same buckets, so an over-long prompt must fail fast with the
+        # engine-level message, not deep inside bucket_for
+        prompt = validate_prompt(prompt, max_new_tokens, self.max_seq_len,
+                                 self.truncate_prompts)
         rid = self._next_id
         self._next_id += 1
-        r = CascadeRequest(rid, np.asarray(prompt, np.int32))
+        r = CascadeRequest(rid, prompt)
         r._gen = (max_new_tokens, temperature)
         self._requests.append(r)
         return rid

@@ -16,6 +16,13 @@ Prompts are right-padded to their bucket. With the ring cache this is
 hides them until the decode stream overwrites their ring slot at that same
 position, so bucketing never changes a single output token.
 
+The KV cache itself is pluggable (``repro.serving.kv_cache``): admission
+grants a slot *plus* whatever device memory the backend needs for it. The
+``ring`` backend (default) pins a ``max_seq_len`` cache line per slot; the
+``paged`` backend reserves ``ceil((prompt + budget) / block_size)`` pool
+blocks per request and returns them at completion, so concurrency is
+bounded by live tokens rather than worst-case sequence length.
+
 ``DrainBatchEngine`` preserves the previous drain-the-queue batcher (pad
 the batch to its longest prompt, run everyone for the longest budget,
 round-trip logits to the host each token) as the measured baseline for
@@ -32,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
+from repro.serving.kv_cache import make_backend
 from repro.serving.sampler import sample_logits, sample_logits_batch
 
 
@@ -63,12 +71,38 @@ def bucket_for(n: int, buckets: List[int]) -> int:
     for b in buckets:
         if n <= b:
             return b
-    raise ValueError(f"prompt length {n} exceeds the largest bucket "
-                     f"{buckets[-1]}")
+    raise ValueError(
+        f"prompt length {n} exceeds the largest prefill bucket "
+        f"{buckets[-1]} (= max_seq_len); engines validate this at submit() "
+        f"— either raise max_seq_len or submit with truncation enabled")
 
 
-def _path_endswith(path, name: str) -> bool:
-    return len(path) > 0 and getattr(path[-1], "key", None) == name
+def validate_prompt(prompt: np.ndarray, max_new_tokens: int,
+                    max_seq_len: int, truncate: bool) -> np.ndarray:
+    """Shared submit-time guard: prompt + budget must fit the cache.
+
+    Historically an over-long prompt fell into the top bucket and silently
+    relied on ring wraparound (the oldest tokens were overwritten mid-
+    prefill — wrong outputs, no error). Now the engines either raise here
+    with an actionable message or, when ``truncate`` is set, explicitly keep
+    the trailing ``max_seq_len - max_new_tokens`` prompt tokens."""
+    prompt = np.asarray(prompt, np.int32)
+    assert prompt.ndim == 1
+    room = max_seq_len - max_new_tokens
+    if room <= 0:
+        raise ValueError(
+            f"max_new_tokens ({max_new_tokens}) leaves no room for a prompt "
+            f"within max_seq_len ({max_seq_len})")
+    if len(prompt) > room:
+        if not truncate:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
+                f" exceeds max_seq_len ({max_seq_len}); the output buffer"
+                f" and cache are sized for max_seq_len — shorten the prompt,"
+                f" raise max_seq_len, or construct the engine with"
+                f" truncate_prompts=True to keep the prompt tail")
+        prompt = prompt[-room:]
+    return prompt
 
 
 class ServingEngine:
@@ -76,7 +110,10 @@ class ServingEngine:
 
     def __init__(self, lm: LM, params, *, batch_slots: int = 8,
                  max_seq_len: int = 512, seed: int = 0,
-                 eos_id: Optional[int] = None, min_bucket: int = 16):
+                 eos_id: Optional[int] = None, min_bucket: int = 16,
+                 cache_backend="ring", block_size: int = 16,
+                 num_pool_blocks: Optional[int] = None,
+                 truncate_prompts: bool = False):
         if lm.cfg.frontend.kind == "audio":
             raise NotImplementedError("engine serves text-token streams")
         self.lm = lm
@@ -84,6 +121,7 @@ class ServingEngine:
         self.batch_slots = batch_slots
         self.max_seq_len = max_seq_len
         self.eos_id = eos_id
+        self.truncate_prompts = truncate_prompts
         self.buckets = prompt_buckets(max_seq_len, min_bucket)
         self._queue: List[Request] = []
         self._next_id = 0
@@ -92,9 +130,14 @@ class ServingEngine:
         self.decode_steps = 0
         self.occupied_slot_steps = 0
         self.generated_tokens = 0
+        self.peak_active_slots = 0
 
+        self.backend = make_backend(
+            cache_backend, lm, params, batch_slots=batch_slots,
+            max_seq_len=max_seq_len, proto_len=self.buckets[0],
+            block_size=block_size, num_blocks=num_pool_blocks)
+        self._cache_state = self.backend.init()
         b, v = batch_slots, lm.cfg.padded_vocab
-        self._caches = self._empty_caches()
         self._state = {
             "last": jnp.zeros((b, v), jnp.float32),     # logits to sample next
             "pos": jnp.zeros((b,), jnp.int32),
@@ -110,13 +153,8 @@ class ServingEngine:
     # -- queue API ------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                temperature: float = 0.0) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        assert prompt.ndim == 1
-        if len(prompt) + max_new_tokens > self.max_seq_len:
-            raise ValueError(
-                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
-                f" exceeds max_seq_len ({self.max_seq_len}); the output"
-                f" buffer and cache are sized for max_seq_len")
+        prompt = validate_prompt(prompt, max_new_tokens, self.max_seq_len,
+                                 self.truncate_prompts)
         rid = self._next_id
         self._next_id += 1
         r = Request(rid, prompt, max_new_tokens, temperature)
@@ -130,23 +168,34 @@ class ServingEngine:
         slots: Dict[int, Request] = {}
         free = list(range(self.batch_slots))
         while self._queue or slots:
+            # admit FIFO while a slot AND its cache reservation are available
             while free and self._queue:
+                nxt = self._queue[0]
+                if not self.backend.can_admit(len(nxt.prompt),
+                                              nxt.max_new_tokens):
+                    break
                 self._admit(self._queue.pop(0), free.pop(), slots)
+            if not slots:
+                # nothing running and the head of the queue can never fit
+                nxt = self._queue[0]
+                raise RuntimeError(
+                    f"request {nxt.request_id} (prompt {len(nxt.prompt)} + "
+                    f"budget {nxt.max_new_tokens}) needs more KV blocks than "
+                    f"the whole pool holds; enlarge num_pool_blocks")
+            self.peak_active_slots = max(self.peak_active_slots, len(slots))
             self._decode_round(slots, free, done)
         return done
 
     # -- device-side programs -------------------------------------------------
-    def _admit_impl(self, params, caches, state, tokens, length, slot,
-                    max_new, temp):
+    def _admit_impl(self, params, cache_state, state, tokens, length, slot,
+                    max_new, temp, table_row):
         """Prefill one bucketed prompt and install it into ``slot``."""
         logits, one_caches = self.lm.prefill(
             params, {"tokens": tokens}, cache_width=self.max_seq_len)
         last = jax.lax.dynamic_index_in_dim(logits[0], length - 1, axis=0,
                                             keepdims=False)
-        caches = jax.tree.map(
-            lambda g, c: jax.lax.dynamic_update_index_in_dim(
-                g, c[:, 0], slot, axis=1),
-            caches, one_caches)
+        cache_state = self.backend.prefill_fill(cache_state, one_caches,
+                                                slot, length, table_row)
         state = dict(state)
         state["last"] = state["last"].at[slot].set(last.astype(jnp.float32))
         state["pos"] = state["pos"].at[slot].set(length)
@@ -154,9 +203,9 @@ class ServingEngine:
         state["budget"] = state["budget"].at[slot].set(max_new)
         state["temp"] = state["temp"].at[slot].set(temp)
         state["active"] = state["active"].at[slot].set(max_new > 0)
-        return caches, state
+        return cache_state, state
 
-    def _step_impl(self, params, caches, state, rng):
+    def _step_impl(self, params, cache_state, state, rng):
         """Fused decode step: sample → append → done-detect, on device."""
         active = state["active"]
         nxt = sample_logits_batch(rng, state["last"], state["temp"])
@@ -166,8 +215,10 @@ class ServingEngine:
             jnp.where(active, nxt, state["out"][rows, idx]))
         steps = state["steps"] + active.astype(jnp.int32)
         feed = jnp.where(active, nxt, 0)[:, None]
-        logits, caches = self.lm.decode_step(params, caches, feed,
-                                             state["pos"])
+        logits, caches = self.lm.decode_step(
+            params, cache_state["caches"], feed, state["pos"],
+            layout=self.backend.layout,
+            block_tables=cache_state["tables"])
         finished = steps >= state["budget"]
         if self.eos_id is not None:
             finished |= nxt == self.eos_id
@@ -180,7 +231,7 @@ class ServingEngine:
             "active": active & ~finished,
             "out": out,
         }
-        return caches, state
+        return {"caches": caches, "tables": cache_state["tables"]}, state
 
     # -- host-side management -------------------------------------------------
     def _admit(self, r: Request, slot: int, slots: Dict[int, Request]):
@@ -188,10 +239,11 @@ class ServingEngine:
         bucket = bucket_for(length, self.buckets)
         tokens = np.zeros((1, bucket), np.int32)
         tokens[0, :length] = r.prompt                    # right-pad (exact)
-        self._caches, self._state = self._admit_fn(
-            self.params, self._caches, self._state, jnp.asarray(tokens),
+        table_row = self.backend.alloc_slot(slot, length, r.max_new_tokens)
+        self._cache_state, self._state = self._admit_fn(
+            self.params, self._cache_state, self._state, jnp.asarray(tokens),
             jnp.int32(length), jnp.int32(slot), jnp.int32(r.max_new_tokens),
-            jnp.float32(r.temperature))
+            jnp.float32(r.temperature), jnp.asarray(table_row))
         r.admit_s = time.perf_counter()
         slots[slot] = r
 
@@ -199,8 +251,8 @@ class ServingEngine:
         if not slots:
             return
         self._rng, k = jax.random.split(self._rng)
-        self._caches, self._state = self._step_fn(
-            self.params, self._caches, self._state, k)
+        self._cache_state, self._state = self._step_fn(
+            self.params, self._cache_state, self._state, k)
         self.decode_steps += 1
         self.occupied_slot_steps += len(slots)
         active = np.asarray(self._state["active"])       # the one host sync
@@ -211,31 +263,19 @@ class ServingEngine:
             r.finish_s = time.perf_counter()
             r.latency_s = r.finish_s - r.submit_s
             self.generated_tokens += n
+            self._cache_state = self.backend.free_slot(self._cache_state,
+                                                       slot)
             free.append(slot)
             done[r.request_id] = r
-
-    def _empty_caches(self):
-        """A batch_slots-wide cache pytree structurally identical to what
-        ``prefill`` returns (so admission can tree.map-scatter into it)."""
-        proto = jax.eval_shape(
-            lambda p, t: self.lm.prefill(p, {"tokens": t},
-                                         cache_width=self.max_seq_len)[1],
-            self.params,
-            jax.ShapeDtypeStruct((1, self.buckets[0]), jnp.int32))
-        b = self.batch_slots
-
-        def leaf(path, a):
-            shape = (a.shape[0], b) + a.shape[2:]
-            if _path_endswith(path, "pos"):
-                return jnp.full(shape, -1, a.dtype)      # -1 = empty slot
-            return jnp.zeros(shape, a.dtype)
-
-        return jax.tree_util.tree_map_with_path(leaf, proto)
 
     # -- stats ----------------------------------------------------------------
     def occupancy(self) -> float:
         return self.occupied_slot_steps / max(
             self.decode_steps * self.batch_slots, 1)
+
+    def hbm_bytes(self) -> int:
+        """Device-resident KV-cache footprint of this engine."""
+        return self.backend.hbm_bytes()
 
 
 class DrainBatchEngine:
@@ -245,13 +285,15 @@ class DrainBatchEngine:
     on the host every token."""
 
     def __init__(self, lm: LM, params, *, batch_slots: int = 8,
-                 max_seq_len: int = 512, seed: int = 0):
+                 max_seq_len: int = 512, seed: int = 0,
+                 truncate_prompts: bool = False):
         if lm.cfg.frontend.kind == "audio":
             raise NotImplementedError("engine serves text-token streams")
         self.lm = lm
         self.params = params
         self.batch_slots = batch_slots
         self.max_seq_len = max_seq_len
+        self.truncate_prompts = truncate_prompts
         self.rng = jax.random.PRNGKey(seed)
         self._queue: List[Request] = []
         self._next_id = 0
@@ -265,10 +307,11 @@ class DrainBatchEngine:
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                temperature: float = 0.0) -> int:
+        prompt = validate_prompt(prompt, max_new_tokens, self.max_seq_len,
+                                 self.truncate_prompts)
         rid = self._next_id
         self._next_id += 1
-        r = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
-                    temperature)
+        r = Request(rid, prompt, max_new_tokens, temperature)
         r.submit_s = time.perf_counter()
         self._queue.append(r)
         return rid

@@ -1,0 +1,432 @@
+"""Pluggable KV-cache backends for the serving engines.
+
+The cache seam has two levels, both defined here:
+
+**Layouts** (``RingLayout`` / ``PagedLayout``) are stateless, hashable
+objects the *model* programs against: ``append`` writes one decode step's
+K/V (or MLA latents) into a layer's cache arrays, ``attend`` runs
+single-token GQA attention over them, and ``context`` materializes a
+per-slot contiguous view for mixers that attend in plain jnp (MLA's
+absorbed form). ``attn_decode`` / ``mla_decode`` / ``LM.decode_step`` take a
+layout plus an optional ``block_tables`` array and never touch cache-dict
+internals directly.
+
+**Backends** (``RingCache`` / ``PagedCache``) are what the *engine* owns:
+device cache state, slot admission (``alloc_slot`` → ``prefill_fill``),
+completion (``free_slot``) and accounting (``hbm_bytes``). ``RingCache`` is
+the original behavior extracted: every slot pins a ``max_seq_len``-wide
+ring, so HBM per slot is worst-case. ``PagedCache`` is vLLM-style: one
+global pool of fixed-size blocks per layer plus a per-slot block table,
+with a host-side free-block allocator — admission reserves exactly
+``ceil((prompt + budget) / block_size)`` blocks, so concurrent slots are
+bounded by *live tokens*, not worst-case sequence length.
+
+Paged conventions (shared by the Pallas kernel, the jnp oracle, and the
+engine):
+
+- pool block 0 is a reserved **trash block**, never allocated; writes on
+  behalf of free / finished slots land there;
+- block-table entries are physical block ids ≥ 1 when allocated and −1
+  when not; attention fully masks −1 entries;
+- per-token ``pos`` in the pool is −1 until written, and pad positions are
+  installed as −1 at prefill, so a slot's visible context is exactly its
+  real tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pos1d(cur_pos, batch: int) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (batch,))
+
+
+def _map_kv_dicts(fn, tree, other=None):
+    """Apply ``fn`` at each per-block cache dict (the ones holding "pos"),
+    preserving the list/tuple nesting the model builds around them."""
+    if isinstance(tree, dict):
+        if "pos" not in tree:
+            raise NotImplementedError(
+                f"cache dict without positions (keys={sorted(tree)}) — "
+                "paged layout supports attention caches only")
+        return fn(tree) if other is None else fn(tree, other)
+    if isinstance(tree, (list, tuple)):
+        if other is None:
+            sub = [_map_kv_dicts(fn, x) for x in tree]
+        else:
+            sub = [_map_kv_dicts(fn, x, y) for x, y in zip(tree, other)]
+        return type(tree)(sub)
+    raise NotImplementedError(f"unsupported cache node: {type(tree)}")
+
+
+# ---------------------------------------------------------------------------
+# Layouts: the layer-level contract the attention code programs against
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RingLayout:
+    """Per-slot ring: cache arrays are (B, W, ...); token at position ``p``
+    lives at slot ``p % W`` and ``pos`` records which position each slot
+    currently holds (−1 = empty)."""
+
+    def append(self, cache: Dict[str, jnp.ndarray], updates, cur_pos,
+               block_tables=None) -> Dict[str, jnp.ndarray]:
+        b, width = cache["pos"].shape
+        cur = _pos1d(cur_pos, b)
+        slot = cur % width
+        rows = jnp.arange(b)
+        new = {k: cache[k].at[rows, slot].set(u[:, 0])
+               for k, u in updates.items()}
+        new["pos"] = cache["pos"].at[rows, slot].set(cur)
+        return new
+
+    def attend(self, q, cache, q_pos, block_tables=None, *,
+               window: Optional[int], scale: float,
+               use_kernel: Optional[bool] = None,
+               interpret: Optional[bool] = None):
+        from repro.kernels.ops import decode_attn
+        return decode_attn(q, cache["k"], cache["v"], q_pos, cache["pos"],
+                           window=window, scale=scale, use_kernel=use_kernel,
+                           interpret=interpret)
+
+    def context(self, cache, block_tables=None) -> Dict[str, jnp.ndarray]:
+        """Per-slot contiguous view (identity for the ring)."""
+        return cache
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Global block pool: cache arrays are (N, block_size, ...) shared by
+    every slot; ``block_tables`` (B, M) maps a slot's logical block
+    ``pos // block_size`` to a physical pool block."""
+    block_size: int
+
+    def append(self, cache: Dict[str, jnp.ndarray], updates, cur_pos,
+               block_tables=None) -> Dict[str, jnp.ndarray]:
+        assert block_tables is not None, "paged layout needs block tables"
+        b, m = block_tables.shape
+        cur = _pos1d(cur_pos, b)
+        logical = jnp.clip(cur // self.block_size, 0, m - 1)
+        row = block_tables[jnp.arange(b), logical]
+        # free / never-admitted slots have no blocks: park their writes in
+        # the trash block (0) and keep its positions masked
+        phys = jnp.where(row >= 0, row, 0)
+        off = cur % self.block_size
+        new = {k: cache[k].at[phys, off].set(u[:, 0])
+               for k, u in updates.items()}
+        new["pos"] = cache["pos"].at[phys, off].set(
+            jnp.where(row >= 0, cur, -1))
+        return new
+
+    def attend(self, q, cache, q_pos, block_tables=None, *,
+               window: Optional[int], scale: float,
+               use_kernel: Optional[bool] = None,
+               interpret: Optional[bool] = None):
+        from repro.kernels.ops import paged_decode_attn
+        return paged_decode_attn(q, cache["k"], cache["v"], q_pos,
+                                 cache["pos"], block_tables, window=window,
+                                 scale=scale, use_kernel=use_kernel,
+                                 interpret=interpret)
+
+    def context(self, cache, block_tables=None) -> Dict[str, jnp.ndarray]:
+        """Gather each slot's blocks into a contiguous (B, M*bs, ...) view;
+        unallocated table entries surface as pos −1 (fully masked)."""
+        from repro.kernels.ref import gather_paged_kv
+        out = {}
+        pos = None
+        for key, leaf in cache.items():
+            if key == "pos":
+                continue
+            out[key], pos = gather_paged_kv(leaf, cache["pos"], block_tables)
+        out["pos"] = pos
+        return out
+
+
+RING = RingLayout()
+
+
+# ---------------------------------------------------------------------------
+# Backends: the engine-level contract
+# ---------------------------------------------------------------------------
+
+class KVCacheBackend:
+    """Engine-side cache owner.
+
+    ``init`` returns the device cache state (a dict with "caches" — the
+    model's cache pytree — and "tables", the (B, M) block tables or None).
+    Admission is two-phase: the host calls ``alloc_slot`` (reserve blocks,
+    may refuse), then passes the returned table row into ``prefill_fill``
+    *inside* the jitted admit program. ``free_slot`` returns the blocks at
+    completion. ``hbm_bytes`` is the device-resident KV footprint.
+    """
+
+    layout: Any
+
+    def init(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        raise NotImplementedError
+
+    def alloc_slot(self, slot: int, prompt_len: int,
+                   max_new: int) -> np.ndarray:
+        """Host-side reservation; returns the slot's block-table row (a
+        dummy for backends without tables). Must only be called after
+        ``can_admit`` said yes."""
+        raise NotImplementedError
+
+    def prefill_fill(self, cache_state, one_caches, slot, length, table_row):
+        """Install a single-request prefilled cache into ``slot`` (traced
+        inside the engine's admit program)."""
+        raise NotImplementedError
+
+    def free_slot(self, cache_state, slot: int) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def hbm_bytes(self) -> int:
+        raise NotImplementedError
+
+    def hbm_bytes_per_slot(self) -> float:
+        raise NotImplementedError
+
+
+def _cache_proto(lm, params, max_seq_len: int, proto_len: int):
+    """Abstract per-request cache structure, as ``prefill`` returns it."""
+    return jax.eval_shape(
+        lambda p, t: lm.prefill(p, {"tokens": t},
+                                cache_width=max_seq_len)[1],
+        params, jax.ShapeDtypeStruct((1, proto_len), jnp.int32))
+
+
+def _path_endswith(path, name: str) -> bool:
+    return len(path) > 0 and getattr(path[-1], "key", None) == name
+
+
+class RingCache(KVCacheBackend):
+    """The original per-slot ring caches, extracted behind the API: every
+    slot owns a full ``max_seq_len``-wide cache line in each layer."""
+
+    def __init__(self, lm, params, *, batch_slots: int, max_seq_len: int,
+                 proto_len: int = 16):
+        self.layout = RING
+        self.batch_slots = batch_slots
+        self.max_seq_len = max_seq_len
+        self._proto = _cache_proto(lm, params, max_seq_len, proto_len)
+
+    def init(self) -> Dict[str, Any]:
+        b = self.batch_slots
+
+        def leaf(path, a):
+            shape = (a.shape[0], b) + a.shape[2:]
+            if _path_endswith(path, "pos"):
+                return jnp.full(shape, -1, a.dtype)      # -1 = empty slot
+            return jnp.zeros(shape, a.dtype)
+
+        caches = jax.tree_util.tree_map_with_path(leaf, self._proto)
+        return {"caches": caches, "tables": None}
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        return True                       # a granted slot is the only gate
+
+    def alloc_slot(self, slot, prompt_len, max_new) -> np.ndarray:
+        return np.zeros((1,), np.int32)   # no tables: fixed dummy row
+
+    def prefill_fill(self, cache_state, one_caches, slot, length, table_row):
+        caches = jax.tree.map(
+            lambda g, c: jax.lax.dynamic_update_index_in_dim(
+                g, c[:, 0], slot, axis=1),
+            cache_state["caches"], one_caches)
+        return {"caches": caches, "tables": cache_state["tables"]}
+
+    def free_slot(self, cache_state, slot):
+        return cache_state                # rings are reused in place
+
+    def hbm_bytes(self) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(self._proto):
+            n = math.prod((leaf.shape[0], self.batch_slots) + leaf.shape[2:])
+            total += n * leaf.dtype.itemsize
+        return total
+
+    def hbm_bytes_per_slot(self) -> float:
+        return self.hbm_bytes() / self.batch_slots
+
+
+class PagedCache(KVCacheBackend):
+    """Block-table backend: a global pool of ``num_blocks`` blocks of
+    ``block_size`` tokens per layer, allocated per request at admission and
+    returned at completion. Slot count is bounded by live tokens in the
+    pool, not by ``batch_slots × max_seq_len``."""
+
+    def __init__(self, lm, params, *, batch_slots: int, max_seq_len: int,
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 proto_len: int = 16):
+        for stage in lm.cfg.stages:
+            for bdef in stage.blocks:
+                if bdef.mixer not in ("attn", "mla"):
+                    raise NotImplementedError(
+                        f"paged KV backend supports attention mixers only "
+                        f"(got {bdef.mixer!r}); use cache_backend='ring'")
+        self.layout = PagedLayout(block_size)
+        self.batch_slots = batch_slots
+        self.max_seq_len = max_seq_len
+        self.block_size = block_size
+        self.blocks_per_slot = -(-max_seq_len // block_size)   # table width M
+        if num_blocks is None:
+            # default to ring-equivalent capacity (+ the trash block)
+            num_blocks = batch_slots * self.blocks_per_slot + 1
+        if num_blocks < 2:
+            raise ValueError("paged pool needs ≥ 2 blocks (block 0 is trash)")
+        self.num_blocks = num_blocks
+        self._proto = _cache_proto(lm, params, max_seq_len, proto_len)
+        self._free: List[int] = list(range(1, num_blocks))     # 0 = trash
+        self._slot_blocks: Dict[int, List[int]] = {}
+        # accounting for the bench / capacity planning
+        self.admitted = 0
+        self.blocks_allocated_total = 0
+        self.peak_blocks_in_use = 0
+
+    # -- device state --------------------------------------------------------
+    def init(self) -> Dict[str, Any]:
+        n, bs = self.num_blocks, self.block_size
+
+        def pool(d):
+            out = {}
+            for key, a in d.items():
+                # proto leaves are (L, 1, W, ...): swap the per-request
+                # (1, W) cache line for the (N, bs) pool
+                shape = (a.shape[0], n, bs) + a.shape[3:]
+                if key == "pos":
+                    shape = (a.shape[0], n, bs)
+                    out[key] = jnp.full(shape, -1, a.dtype)
+                else:
+                    out[key] = jnp.zeros(shape, a.dtype)
+            return out
+
+        caches = _map_kv_dicts(pool, self._proto)
+        tables = jnp.full((self.batch_slots, self.blocks_per_slot), -1,
+                          jnp.int32)
+        return {"caches": caches, "tables": tables}
+
+    # -- host-side allocator -------------------------------------------------
+    def blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        return max(1, -(-(prompt_len + max_new) // self.block_size))
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        return self.blocks_needed(prompt_len, max_new) <= len(self._free)
+
+    def alloc_slot(self, slot, prompt_len, max_new) -> np.ndarray:
+        need = self.blocks_needed(prompt_len, max_new)
+        if need > len(self._free):
+            raise RuntimeError(f"paged pool exhausted: need {need} blocks, "
+                               f"{len(self._free)} free")
+        if slot in self._slot_blocks:
+            raise RuntimeError(f"slot {slot} already holds blocks")
+        blocks, self._free = self._free[:need], self._free[need:]
+        self._slot_blocks[slot] = blocks
+        row = np.full((self.blocks_per_slot,), -1, np.int32)
+        row[:need] = blocks
+        self.admitted += 1
+        self.blocks_allocated_total += need
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        return row
+
+    @property
+    def blocks_in_use(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def reset_stats(self) -> None:
+        """Zero the admission accounting (e.g. after bench warm-up) so
+        ``hbm_bytes_per_slot`` averages only the measured traffic."""
+        self.admitted = 0
+        self.blocks_allocated_total = 0
+        self.peak_blocks_in_use = self.blocks_in_use
+
+    def free_slot(self, cache_state, slot):
+        blocks = self._slot_blocks.pop(slot, None)
+        if blocks is None:
+            return cache_state
+        self._free.extend(blocks)
+        tables = cache_state["tables"].at[slot].set(-1)
+        return {"caches": cache_state["caches"], "tables": tables}
+
+    # -- admission-time install ---------------------------------------------
+    def prefill_fill(self, cache_state, one_caches, slot, length, table_row):
+        """Scatter a prefilled per-request cache into the slot's blocks.
+
+        Tokens are routed by their *position* (block ``pos // bs``, offset
+        ``pos % bs``), so ring-wrapped prefill caches (windowed layers with
+        window < bucket) install correctly, and right-pad entries
+        (pos ≥ length) are parked in the trash block with pos −1 — unlike
+        the ring, the paged cache never exposes pad K/V at all.
+
+        The row's blocks may be reused from a completed request, so their
+        per-token positions are wiped to −1 first: a stale position from the
+        previous tenant can land inside the new request's causal mask, and
+        unlike the ring (which overwrites the whole cache line at admission)
+        the paged install only writes the new prompt's prefix."""
+        bs = self.block_size
+        row_safe = jnp.where(table_row >= 0, table_row, 0)
+
+        def fill(c, o):
+            src_pos = o["pos"][0, 0]                      # (W,) layer-0 row
+            valid = (src_pos >= 0) & (src_pos < length)
+            logical = jnp.clip(src_pos, 0, self.max_seq_len - 1) // bs
+            row_phys = jnp.take(table_row, logical)
+            phys = jnp.where(valid & (row_phys >= 0), row_phys, 0)
+            off = jnp.where(valid, src_pos % bs, 0)
+            new = {}
+            for key, leaf in c.items():
+                if key == "pos":
+                    cleared = leaf.at[:, row_safe, :].set(-1)
+                    new[key] = cleared.at[:, phys, off].set(
+                        jnp.where(valid, src_pos, -1)[None, :])
+                else:
+                    new[key] = leaf.at[:, phys, off].set(o[key][:, 0])
+            return new
+
+        caches = _map_kv_dicts(fill, cache_state["caches"], one_caches)
+        tables = cache_state["tables"].at[slot].set(table_row)
+        return {"caches": caches, "tables": tables}
+
+    # -- accounting ----------------------------------------------------------
+    def block_bytes(self) -> int:
+        """Bytes one pool block costs across all layers."""
+        total = 0
+        for leaf in jax.tree.leaves(self._proto):
+            per_tok = math.prod(leaf.shape[:1] + leaf.shape[3:])
+            total += per_tok * self.block_size * leaf.dtype.itemsize
+        return total
+
+    def hbm_bytes(self) -> int:
+        return self.block_bytes() * self.num_blocks
+
+    def hbm_bytes_per_slot(self) -> float:
+        """Average bytes actually reserved per admitted request (the ring
+        equivalent is a constant ``max_seq_len`` line)."""
+        if self.admitted == 0:
+            return float(self.block_bytes() * self.blocks_per_slot)
+        return self.block_bytes() * self.blocks_allocated_total / self.admitted
+
+
+def make_backend(kind, lm, params, *, batch_slots: int, max_seq_len: int,
+                 proto_len: int = 16, block_size: int = 16,
+                 num_blocks: Optional[int] = None) -> KVCacheBackend:
+    if isinstance(kind, KVCacheBackend):
+        return kind
+    if kind == "ring":
+        return RingCache(lm, params, batch_slots=batch_slots,
+                         max_seq_len=max_seq_len, proto_len=proto_len)
+    if kind == "paged":
+        return PagedCache(lm, params, batch_slots=batch_slots,
+                          max_seq_len=max_seq_len, proto_len=proto_len,
+                          block_size=block_size, num_blocks=num_blocks)
+    raise ValueError(f"unknown cache backend {kind!r} "
+                     "(expected 'ring' or 'paged')")

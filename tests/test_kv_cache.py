@@ -1,0 +1,223 @@
+"""KV-cache backend API: the block allocator, HBM accounting, layout
+equivalence at the layer level, and the engine-level exactness contract —
+paged greedy generations match the ring token-for-token."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (MLA, SWIGLU, BlockDef, MLAConfig, ModelConfig,
+                                Stage, dense_stages)
+from repro.models.model import LM
+from repro.serving import PagedCache, RingCache, ServingEngine
+from repro.serving.kv_cache import RING, PagedLayout
+
+
+def _tiny_cfg(layers=2):
+    return ModelConfig(
+        name="tiny", family="dense", source="t", num_layers=layers,
+        d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        vocab_size=64, stages=dense_stages(layers), param_dtype="float32")
+
+
+def _mla_cfg():
+    return ModelConfig(
+        name="tiny-mla", family="mla", source="t", num_layers=2,
+        d_model=32, num_heads=4, num_kv_heads=4, head_dim=8, d_ff=64,
+        vocab_size=64,
+        stages=(Stage(blocks=(BlockDef(mixer=MLA, mlp=SWIGLU),), repeat=2),),
+        param_dtype="float32",
+        mla=MLAConfig(q_lora_rank=16, kv_lora_rank=8, qk_nope_head_dim=8,
+                      qk_rope_head_dim=4, v_head_dim=8))
+
+
+def _lm(cfg):
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    return lm, params
+
+
+def _mixed_trace(n=7, seed=1):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 60, size=int(rng.integers(3, 12))),
+             int(rng.integers(3, 9))) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_reserves_and_frees():
+    lm, params = _lm(_tiny_cfg())
+    be = PagedCache(lm, params, batch_slots=4, max_seq_len=32, block_size=8,
+                    num_blocks=9)                     # 8 usable, 0 = trash
+    assert be.blocks_needed(5, 3) == 1
+    assert be.blocks_needed(5, 4) == 2                # 9 tokens, bs=8
+    assert be.can_admit(20, 8)                        # 28 tokens -> 4 blocks
+    row = be.alloc_slot(0, 20, 8)
+    assert row.shape == (be.blocks_per_slot,)
+    assert (row[:4] > 0).all() and (row[4:] == -1).all()
+    assert 0 not in row[:4]                           # trash never allocated
+    assert be.blocks_in_use == 4
+    # a second big request no longer fits; a small one does
+    assert not be.can_admit(25, 8)
+    assert be.can_admit(5, 3)
+    state = be.init()
+    state = be.free_slot(state, 0)
+    assert be.blocks_in_use == 0
+    assert be.can_admit(25, 7)
+    # freeing an empty slot is a no-op
+    assert be.free_slot(state, 0) is state
+
+
+def test_allocator_exhaustion_raises():
+    lm, params = _lm(_tiny_cfg())
+    be = PagedCache(lm, params, batch_slots=2, max_seq_len=32, block_size=8,
+                    num_blocks=3)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        be.alloc_slot(0, 20, 8)
+
+
+def test_free_slot_clears_table_row():
+    lm, params = _lm(_tiny_cfg())
+    be = PagedCache(lm, params, batch_slots=2, max_seq_len=32, block_size=8)
+    state = be.init()
+    row = be.alloc_slot(1, 10, 4)
+    state = {"caches": state["caches"],
+             "tables": state["tables"].at[1].set(jnp.asarray(row))}
+    state = be.free_slot(state, 1)
+    assert bool(jnp.all(state["tables"][1] == -1))
+
+
+def test_hbm_accounting():
+    lm, params = _lm(_tiny_cfg())
+    ring = RingCache(lm, params, batch_slots=4, max_seq_len=32)
+    # k + v + pos, per slot: 2 layers x (2x2x8 + 2x2x8 + 2) x 32 pos x 4 B
+    assert ring.hbm_bytes_per_slot() == ring.hbm_bytes() / 4
+    assert ring.hbm_bytes() > 0
+
+    paged = PagedCache(lm, params, batch_slots=4, max_seq_len=32,
+                       block_size=8)
+    # ring-equivalent default pool: slots x blocks_per_slot + trash block
+    assert paged.num_blocks == 4 * 4 + 1
+    # a full table's worth of blocks costs exactly one ring cache line
+    assert (paged.block_bytes() * paged.blocks_per_slot
+            == ring.hbm_bytes_per_slot())
+    assert paged.hbm_bytes() == paged.block_bytes() * paged.num_blocks
+    paged.alloc_slot(0, 5, 3)                         # 1 block
+    paged.alloc_slot(1, 20, 8)                        # 4 blocks
+    assert paged.hbm_bytes_per_slot() == paged.block_bytes() * 2.5
+
+
+def test_paged_rejects_recurrent_mixers():
+    from repro.configs import get_config
+    cfg = get_config("recurrentgemma-9b")
+    lm = LM(cfg)
+    with pytest.raises(NotImplementedError, match="attention mixers"):
+        PagedCache(lm, params=None, batch_slots=2, max_seq_len=32)
+
+
+# ---------------------------------------------------------------------------
+# Layout-level equivalence: paged append/attend == ring append/attend
+# ---------------------------------------------------------------------------
+
+def test_paged_layout_append_then_attend_matches_ring():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    b, w, kv, hd, h, bs = 2, 32, 2, 16, 4, 8
+    m = w // bs
+    n = b * m + 1
+    ring_cache = {"k": jnp.zeros((b, w, kv, hd)),
+                  "v": jnp.zeros((b, w, kv, hd)),
+                  "pos": jnp.full((b, w), -1, jnp.int32)}
+    paged_cache = {"k": jnp.zeros((n, bs, kv, hd)),
+                   "v": jnp.zeros((n, bs, kv, hd)),
+                   "pos": jnp.full((n, bs), -1, jnp.int32)}
+    tables = jnp.asarray(
+        np.arange(1, n).reshape(b, m), jnp.int32)     # slot-major blocks
+    paged = PagedLayout(bs)
+    steps = 20
+    kseq = jax.random.normal(ks[0], (b, steps, kv, hd))
+    vseq = jax.random.normal(ks[1], (b, steps, kv, hd))
+    for t in range(steps):
+        cur = jnp.full((b,), t, jnp.int32)
+        upd = {"k": kseq[:, t:t + 1], "v": vseq[:, t:t + 1]}
+        ring_cache = RING.append(ring_cache, upd, cur)
+        paged_cache = paged.append(paged_cache, upd, cur, tables)
+    q = jax.random.normal(ks[2], (b, 1, h, hd))
+    q_pos = jnp.full((b,), steps - 1, jnp.int32)
+    a = RING.attend(q, ring_cache, q_pos, window=None, scale=hd ** -0.5,
+                    use_kernel=False)
+    p = paged.attend(q, paged_cache, q_pos, tables, window=None,
+                     scale=hd ** -0.5, use_kernel=False)
+    assert float(jnp.max(jnp.abs(a - p))) < 1e-5
+    # the gathered context view equals the ring arrays token-for-token
+    ctx = paged.context(paged_cache, tables)
+    for key in ("k", "v"):
+        np.testing.assert_allclose(np.asarray(ctx[key][:, :steps]),
+                                   np.asarray(ring_cache[key][:, :steps]))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level exactness: the acceptance contract
+# ---------------------------------------------------------------------------
+
+def _run_engine(lm, params, trace, **kw):
+    eng = ServingEngine(lm, params, **kw)
+    for prompt, max_new in trace:
+        eng.submit(prompt, max_new_tokens=max_new)
+    return eng, {rid: r.output for rid, r in eng.run().items()}
+
+
+@pytest.mark.slow
+def test_paged_engine_matches_ring_token_for_token():
+    """The acceptance contract: greedy generations over the mixed-length
+    trace are identical between backends, including when the paged pool is
+    small enough to force block-limited admission and block reuse."""
+    lm, params = _lm(_tiny_cfg())
+    trace = _mixed_trace(n=9, seed=3)
+    _, ring = _run_engine(lm, params, trace, batch_slots=3, max_seq_len=32,
+                          min_bucket=4)
+    # ample pool
+    _, paged = _run_engine(lm, params, trace, batch_slots=3, max_seq_len=32,
+                           min_bucket=4, cache_backend="paged", block_size=8)
+    # starved pool: 8 usable blocks of 8 tokens, forces reuse + queueing
+    eng, paged_small = _run_engine(
+        lm, params, trace, batch_slots=3, max_seq_len=32, min_bucket=4,
+        cache_backend="paged", block_size=8, num_pool_blocks=9)
+    assert set(ring) == set(paged) == set(paged_small)
+    for rid in ring:
+        np.testing.assert_array_equal(ring[rid], paged[rid])
+        np.testing.assert_array_equal(ring[rid], paged_small[rid])
+    be = eng.backend
+    assert be.blocks_in_use == 0                      # everything returned
+    assert be.peak_blocks_in_use <= be.num_blocks - 1
+    assert be.admitted == len(trace)
+
+
+@pytest.mark.slow
+def test_paged_engine_matches_ring_mla():
+    lm, params = _lm(_mla_cfg())
+    trace = _mixed_trace(n=5, seed=4)
+    _, ring = _run_engine(lm, params, trace, batch_slots=2, max_seq_len=32,
+                          min_bucket=4)
+    _, paged = _run_engine(lm, params, trace, batch_slots=2, max_seq_len=32,
+                           min_bucket=4, cache_backend="paged", block_size=8)
+    for rid in ring:
+        np.testing.assert_array_equal(ring[rid], paged[rid])
+
+
+def test_pool_too_small_for_single_request_raises():
+    lm, params = _lm(_tiny_cfg())
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        num_pool_blocks=3)
+    eng.submit(np.arange(20, dtype=np.int32), max_new_tokens=8)
+    with pytest.raises(RuntimeError, match="KV blocks"):
+        eng.run()
+
+
+def test_unknown_backend_rejected():
+    lm, params = _lm(_tiny_cfg())
+    with pytest.raises(ValueError, match="unknown cache backend"):
+        ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                      cache_backend="flat")

@@ -1,0 +1,127 @@
+"""Paged decode-attention Pallas kernel vs the jnp oracle (interpret mode):
+block-table gather, GQA/MQA, sliding window, partially-filled tail blocks,
+unallocated table entries, reused-pool fragmentation, freed slots."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import paged_decode_attention
+
+CASES = [
+    # (h, kv, hd, bs, window, fills) — fills: live tokens per slot
+    (4, 4, 32, 16, None, (64, 64)),       # MHA, full tables
+    (4, 2, 32, 16, None, (26, 64)),       # GQA g=2, ragged final block
+    (3, 1, 32, 16, None, (48, 5)),        # MQA, short slot
+    (4, 4, 32, 16, 24, (64, 64)),         # sliding window
+    (8, 2, 64, 32, 16, (96, 40)),         # window + GQA g=4, bs=32
+    (4, 2, 16, 8, None, (1, 63)),         # single-token slot, bs=8
+]
+
+
+def _paged_cache(rng, kv, hd, bs, fills, *, dtype=jnp.float32,
+                 scatter_seed=None):
+    """Build a pool + tables as the engine would: block 0 is trash, each
+    slot's tokens [0, fill) land at (table[slot, p // bs], p % bs). With
+    ``scatter_seed`` the physical block ids are shuffled (fragmented pool,
+    as after many alloc/free cycles)."""
+    b = len(fills)
+    m = max(-(-f // bs) for f in fills)
+    blocks_needed = sum(-(-f // bs) for f in fills)
+    n = blocks_needed + 1
+    k = jax.random.normal(rng[0], (n, bs, kv, hd)).astype(dtype)
+    v = jax.random.normal(rng[1], (n, bs, kv, hd)).astype(dtype)
+    order = list(range(1, n))
+    if scatter_seed is not None:
+        np.random.default_rng(scatter_seed).shuffle(order)
+    pos = np.full((n, bs), -1, np.int32)
+    bt = np.full((b, m), -1, np.int32)
+    it = iter(order)
+    for s, fill in enumerate(fills):
+        for j in range(-(-fill // bs)):
+            blk = next(it)
+            bt[s, j] = blk
+            for o in range(bs):
+                p = j * bs + o
+                if p < fill:
+                    pos[blk, o] = p
+    q_pos = jnp.asarray([f - 1 for f in fills], jnp.int32)
+    return k, v, jnp.asarray(pos), jnp.asarray(bt), q_pos
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+def test_paged_kernel_matches_oracle(case):
+    h, kv, hd, bs, window, fills = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (len(fills), 1, h, hd))
+    k, v, pos, bt, q_pos = _paged_cache(ks[1:], kv, hd, bs, fills)
+    out = paged_decode_attention(q, k, v, q_pos, pos, bt, window=window,
+                                 interpret=True)
+    expect = ref.paged_decode_attention_ref(q, k, v, q_pos, pos, bt,
+                                            window=window)
+    assert out.shape == q.shape
+    assert float(jnp.max(jnp.abs(out - expect))) < 1e-4
+
+
+def test_fragmented_pool():
+    """Block ids need not be contiguous or ordered — the table is the only
+    source of layout truth (the pool state after many alloc/free cycles)."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (3, 1, 4, 32))
+    k, v, pos, bt, q_pos = _paged_cache(ks[1:], 2, 32, 16, (40, 64, 17),
+                                        scatter_seed=7)
+    out = paged_decode_attention(q, k, v, q_pos, pos, bt, interpret=True)
+    expect = ref.paged_decode_attention_ref(q, k, v, q_pos, pos, bt)
+    assert float(jnp.max(jnp.abs(out - expect))) < 1e-4
+
+
+def test_freed_slot_is_fully_masked():
+    """A freed slot's table is all −1: both kernel and oracle must return
+    exactly zero (the engine keeps finished slots in the batch until the
+    host reaps them)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32))
+    k, v, pos, bt, q_pos = _paged_cache(ks[1:], 2, 32, 16, (32, 32))
+    bt = bt.at[1].set(-1)
+    out = paged_decode_attention(q, k, v, q_pos, pos, bt, interpret=True)
+    expect = ref.paged_decode_attention_ref(q, k, v, q_pos, pos, bt)
+    assert bool(jnp.all(out[1] == 0))
+    assert float(jnp.max(jnp.abs(out - expect))) < 1e-4
+
+
+def test_matches_ring_kernel_on_same_context():
+    """Paged attention over a gathered-contiguous layout must equal the ring
+    oracle over the equivalent (B, W, KV, hd) cache."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    bs, fills = 16, (26, 64)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32))
+    k, v, pos, bt, q_pos = _paged_cache(ks[1:], 2, 32, bs, fills)
+    out = paged_decode_attention(q, k, v, q_pos, pos, bt, interpret=True)
+    kc, pc = ref.gather_paged_kv(k, pos, bt)
+    vc, _ = ref.gather_paged_kv(v, pos, bt)
+    ring = ref.decode_attention_ref(q, kc, vc, q_pos, pc)
+    assert float(jnp.max(jnp.abs(out - ring))) < 1e-4
+
+
+def test_bf16_pool():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32)).astype(jnp.bfloat16)
+    k, v, pos, bt, q_pos = _paged_cache(ks[1:], 2, 32, 16, (40, 64),
+                                        dtype=jnp.bfloat16)
+    out = paged_decode_attention(q, k, v, q_pos, pos, bt, interpret=True)
+    expect = ref.paged_decode_attention_ref(q, k, v, q_pos, pos, bt)
+    assert out.dtype == jnp.bfloat16
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - expect.astype(jnp.float32)))) < 2e-2
+
+
+def test_ops_dispatch_wrapper():
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32))
+    k, v, pos, bt, q_pos = _paged_cache(ks[1:], 2, 32, 16, (26, 64))
+    a = ops.paged_decode_attn(q, k, v, q_pos, pos, bt, use_kernel=True,
+                              interpret=True)
+    b = ops.paged_decode_attn(q, k, v, q_pos, pos, bt, use_kernel=False)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-4

@@ -1,0 +1,76 @@
+"""Direct unit tests for ``serving/sampler.py::sample_logits_batch``: the
+fused decode step samples every slot in one call with per-row temperature,
+so greedy rows must be exact argmax, stochastic rows must respect top-k
+masking, and the whole thing must stay jit-traceable with mixed rows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import sample_logits, sample_logits_batch
+
+
+def _logits(seed=0, b=8, v=64):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, v)) * 3.0
+
+
+def test_temperature_zero_rows_match_argmax_exactly():
+    logits = _logits()
+    temp = jnp.zeros((8,), jnp.float32)
+    for seed in range(3):                  # greedy must ignore the rng
+        out = sample_logits_batch(jax.random.PRNGKey(seed), logits, temp)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(jnp.argmax(logits, axis=-1)))
+    assert out.dtype == jnp.int32
+
+
+def test_mixed_rows_greedy_unaffected_by_stochastic_neighbors():
+    """Per-row temperature: greedy rows must stay argmax even when other
+    rows in the same call sample stochastically."""
+    logits = _logits(1)
+    temp = jnp.asarray([0.0, 1.0, 0.0, 2.0, 0.0, 0.5, 0.0, 1.5], jnp.float32)
+    out = np.asarray(sample_logits_batch(jax.random.PRNGKey(7), logits, temp))
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))
+    for row in (0, 2, 4, 6):
+        assert out[row] == greedy[row]
+
+
+def test_stochastic_rows_respect_top_k():
+    logits = _logits(2, b=4, v=32)
+    temp = jnp.full((4,), 1.5, jnp.float32)
+    k = 5
+    allowed = np.asarray(jax.lax.top_k(logits, k)[1])
+    for seed in range(20):
+        out = np.asarray(sample_logits_batch(jax.random.PRNGKey(seed),
+                                             logits, temp, top_k=k))
+        for row in range(4):
+            assert out[row] in allowed[row], (seed, row)
+
+
+def test_stochastic_rows_cover_more_than_argmax():
+    """High temperature must actually sample (not collapse to greedy)."""
+    logits = _logits(3, b=2, v=16)
+    temp = jnp.full((2,), 5.0, jnp.float32)
+    seen = {int(sample_logits_batch(jax.random.PRNGKey(s), logits, temp)[0])
+            for s in range(64)}
+    assert len(seen) > 1
+
+
+def test_jit_traceable_with_mixed_rows():
+    fn = jax.jit(lambda r, l, t: sample_logits_batch(r, l, t, top_k=4))
+    logits = _logits(4)
+    temp = jnp.asarray([0.0, 1.0] * 4, jnp.float32)
+    out = fn(jax.random.PRNGKey(0), logits, temp)
+    assert out.shape == (8,)
+    # retrace-free across different row mixes (shapes unchanged)
+    out2 = fn(jax.random.PRNGKey(1), logits, jnp.flip(temp))
+    assert out2.shape == (8,)
+
+
+def test_single_stream_sampler_consistency():
+    """``sample_logits`` (single-request path) agrees with the batch
+    sampler's greedy rows."""
+    logits = _logits(5, b=1)[0]
+    single = sample_logits(jax.random.PRNGKey(0), logits, temperature=0.0)
+    batch = sample_logits_batch(jax.random.PRNGKey(0), logits[None],
+                                jnp.zeros((1,), jnp.float32))
+    assert int(single) == int(batch[0])

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig, dense_stages
@@ -49,6 +50,7 @@ def test_serving_engine_batches_and_completes():
         assert r.latency_s > 0
 
 
+@pytest.mark.slow
 def test_continuous_matches_drain_batch():
     """Mixed-length prompts with different decode budgets must generate
     exactly the same greedy tokens on the continuous-batching engine as on
@@ -90,6 +92,57 @@ def test_continuous_engine_eos_stops_early():
     eng.submit(np.arange(5), max_new_tokens=8)
     out = eng.run()[0].output
     assert len(out) == 1 and int(out[0]) == first
+
+
+def test_submit_rejects_overlong_prompts():
+    """An over-long prompt used to fall into the top bucket and silently
+    wrap the ring mid-prefill; every engine must now refuse at submit."""
+    from repro.serving import DrainBatchEngine, ServingEngine
+    cfg = _tiny_cfg()
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    for cls in (ServingEngine, DrainBatchEngine):
+        eng = cls(lm, params, batch_slots=2, max_seq_len=16)
+        with pytest.raises(ValueError, match="max_seq_len"):
+            eng.submit(np.arange(20), max_new_tokens=4)
+        with pytest.raises(ValueError, match="max_seq_len"):
+            eng.submit(np.arange(14), max_new_tokens=4)   # prompt+budget > 16
+        with pytest.raises(ValueError, match="no room"):
+            eng.submit(np.arange(4), max_new_tokens=16)
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=16)
+    eng.submit(np.arange(12), max_new_tokens=4)           # exactly fits
+
+
+def test_submit_truncation_keeps_prompt_tail():
+    from repro.serving import ServingEngine
+    cfg = _tiny_cfg()
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(0).integers(0, 100, size=40)
+    trunc = ServingEngine(lm, params, batch_slots=1, max_seq_len=16,
+                          min_bucket=4, truncate_prompts=True)
+    rid = trunc.submit(prompt, max_new_tokens=4)
+    out_t = trunc.run()[rid].output
+    assert out_t.shape == (4,)
+    # truncation is explicit: same output as submitting the tail directly
+    tail = ServingEngine(lm, params, batch_slots=1, max_seq_len=16,
+                         min_bucket=4)
+    rid2 = tail.submit(prompt[-12:], max_new_tokens=4)
+    np.testing.assert_array_equal(out_t, tail.run()[rid2].output)
+
+
+def test_cascade_submit_validates():
+    from repro.cascade.ecc_infer import CascadeLM, edge_variant
+    from repro.serving import CascadeServingEngine
+    cloud_cfg = _tiny_cfg()
+    edge_cfg = edge_variant(cloud_cfg, layers=1)
+    cloud, edge = LM(cloud_cfg, kv_chunk=8), LM(edge_cfg, kv_chunk=8)
+    cp, _ = cloud.init(jax.random.PRNGKey(0))
+    ep, _ = edge.init(jax.random.PRNGKey(1))
+    eng = CascadeServingEngine(CascadeLM(edge, cloud), ep, cp,
+                               batch_slots=2, max_seq_len=16)
+    with pytest.raises(ValueError, match="max_seq_len"):
+        eng.submit(np.arange(30), max_new_tokens=4)
 
 
 def test_cascade_serving_engine_routes_and_generates():
