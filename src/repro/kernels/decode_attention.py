@@ -1,5 +1,6 @@
-"""Decode-attention Pallas kernels — single-token queries against a ring
-KV cache or a paged (block-table) KV pool (causal, sliding-window, GQA).
+"""Cached-attention Pallas kernels — decode tokens or prompt chunks against
+a ring KV cache or a paged (block-table) KV pool (causal, sliding-window,
+GQA).
 
 This is the memory-bound half of serving: every decode step streams the
 whole cache through the core once per layer, so the kernel's job is to keep
@@ -10,6 +11,13 @@ grid ``(B, KV, num_kv_blocks)``; the last axis is the sequential
 into the head tile: each (batch, kv-head) program attends with a
 ``(group, head_dim)`` q tile against shared ``(block_k, head_dim)`` k/v
 tiles, so KV blocks are fetched once per group rather than once per q head.
+
+Queries generalize from one decode token to a ``T``-token prompt chunk
+(chunked prefill): the q tile becomes ``(T x group, head_dim)`` with a
+per-query-token position vector, and the validity mask broadcasts over the
+group — the streaming carry and the block skip are shape-agnostic. The
+chunk's own K/V are appended to the cache before the call, so intra-chunk
+causality is ordinary position masking.
 
 Positions are data, not geometry: the cache is a ring (slot = pos % width),
 so causal/window masking reads the per-slot ``k_pos`` array (−1 = empty
@@ -34,9 +42,17 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
 
+def _chunk_positions(q_pos, b: int, t: int) -> jnp.ndarray:
+    """(B,) start positions or (B, T) per-token positions -> (B, T); the
+    normalization rule is shared with the oracle (``ref.query_positions``)
+    so kernel and reference can never disagree about chunk geometry."""
+    from repro.kernels.ref import query_positions
+    return query_positions(q_pos, t).reshape(b, t)
+
+
 def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
             acc_ref, m_ref, l_ref, *, scale: float, window: Optional[int],
-            num_k: int):
+            num_k: int, q_tokens: int, group: int):
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -45,25 +61,28 @@ def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0]                           # (G, hd)
+    q = q_ref[0, 0]                           # (T*G, hd)
     k = k_ref[0, :, 0, :]                     # (bk, hd)
     v = v_ref[0, :, 0, :]
-    qp = qpos_ref[0, 0]                       # scalar: this request's position
+    qp = qpos_ref[0]                          # (T,) query-token positions
     kp = kpos_ref[0:1, :]                     # (1, bk) ring-slot positions
 
-    valid = (kp >= 0) & (kp <= qp)            # empty slots + causality
+    valid = (kp >= 0) & (kp <= qp[:, None])   # (T, bk): empties + causality
     if window is not None:
-        valid &= kp > (qp - window)
+        valid &= kp > (qp[:, None] - window)
 
     # data-dependent block skip: a ring cache is mostly empty early on, and
     # a sliding window masks all but ~window/block_k blocks
     @pl.when(jnp.any(valid))
     def _compute():
+        bk = k.shape[0]
         s = jax.lax.dot_general(
             q.astype(jnp.float32), k.astype(jnp.float32),
             (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale       # (G, bk)
-        s = jnp.where(valid, s, NEG_INF)
+            preferred_element_type=jnp.float32) * scale       # (T*G, bk)
+        mask = jnp.broadcast_to(valid[:, None, :],
+                                (q_tokens, group, bk)).reshape(-1, bk)
+        s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -84,15 +103,15 @@ def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
 def decode_attention(q, k, v, q_pos, k_pos, *, window: Optional[int] = None,
                      scale: Optional[float] = None, block_k: int = 128,
                      interpret: bool = False):
-    """q: (B, 1, H, hd) or (B, H, hd); k, v: (B, W, KV, hd) ring cache;
-    q_pos: (B,) int32 current positions; k_pos: (B, W) int32 cache-slot
+    """q: (B, T, H, hd) or (B, H, hd) (T = 1); k, v: (B, W, KV, hd) ring
+    cache; q_pos: (B,) int32 chunk start positions (per-token positions are
+    start + i) or (B, T) explicit positions; k_pos: (B, W) int32 cache-slot
     positions (−1 = empty). Returns attention output shaped like q.
     """
-    squeeze = q.ndim == 4
-    if squeeze:
-        assert q.shape[1] == 1, "decode kernel takes a single query token"
-        q = q[:, 0]
-    b, h, hd = q.shape
+    no_time = q.ndim == 3
+    if no_time:
+        q = q[:, None]
+    b, t, h, hd = q.shape
     w, kv = k.shape[1], k.shape[2]
     assert h % kv == 0
     g = h // kv
@@ -106,37 +125,42 @@ def decode_attention(q, k, v, q_pos, k_pos, *, window: Optional[int] = None,
         k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
     nk = k.shape[1] // block_k
 
-    qg = q.reshape(b, kv, g, hd)
-    qp = jnp.asarray(q_pos, jnp.int32).reshape(b, 1)
+    # fold (token, group) into one q-row axis: row i = token i//g, head i%g
+    qg = jnp.moveaxis(q.reshape(b, t, kv, g, hd), 2, 1).reshape(
+        b, kv, t * g, hd)
+    qp = _chunk_positions(q_pos, b, t)
     kp = jnp.asarray(k_pos, jnp.int32)
 
-    kernel = functools.partial(_kernel, scale=scale, window=window, num_k=nk)
+    kernel = functools.partial(_kernel, scale=scale, window=window, num_k=nk,
+                               q_tokens=t, group=g)
     out = pl.pallas_call(
         kernel,
         grid=(b, kv, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, t * g, hd),
+                         lambda b_, h_, ik: (b_, h_, 0, 0)),
             pl.BlockSpec((1, block_k, 1, hd),
                          lambda b_, h_, ik: (b_, ik, h_, 0)),
             pl.BlockSpec((1, block_k, 1, hd),
                          lambda b_, h_, ik: (b_, ik, h_, 0)),
-            pl.BlockSpec((1, 1), lambda b_, h_, ik: (b_, 0)),
+            pl.BlockSpec((1, t), lambda b_, h_, ik: (b_, 0)),
             pl.BlockSpec((1, block_k), lambda b_, h_, ik: (b_, ik)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, hd),
+        out_specs=pl.BlockSpec((1, 1, t * g, hd),
                                lambda b_, h_, ik: (b_, h_, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kv, t * g, hd), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((g, hd), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((t * g, hd), jnp.float32),
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, 1), jnp.float32),
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qg, k, v, qp, kp)
-    out = out.reshape(b, h, hd)
-    return out[:, None] if squeeze else out
+    out = jnp.moveaxis(out.reshape(b, kv, t, g, hd), 1, 2).reshape(
+        b, t, h, hd)
+    return out[:, 0] if no_time else out
 
 
 # ---------------------------------------------------------------------------
@@ -145,7 +169,8 @@ def decode_attention(q, k, v, q_pos, k_pos, *, window: Optional[int] = None,
 
 def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
                   acc_ref, m_ref, l_ref, *, scale: float,
-                  window: Optional[int], num_k: int):
+                  window: Optional[int], num_k: int, q_tokens: int,
+                  group: int):
     ib, ik = pl.program_id(0), pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -154,27 +179,30 @@ def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, qpos_ref, kpos_ref, o_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0]                           # (G, hd)
+    q = q_ref[0, 0]                           # (T*G, hd)
     k = k_ref[0, :, 0, :]                     # (bs, hd) — gathered pool block
     v = v_ref[0, :, 0, :]
-    qp = qpos_ref[0, 0]                       # scalar: this request's position
+    qp = qpos_ref[0]                          # (T,) query-token positions
     kp = kpos_ref[0:1, :]                     # (1, bs) per-token positions
     blk = bt_ref[ib, ik]                      # physical block id; −1 = hole
 
-    valid = (kp >= 0) & (kp <= qp) & (blk >= 0)
+    valid = (kp >= 0) & (kp <= qp[:, None]) & (blk >= 0)    # (T, bs)
     if window is not None:
-        valid &= kp > (qp - window)
+        valid &= kp > (qp[:, None] - window)
 
     # skip unallocated table entries and fully-masked blocks entirely: a
     # slot's table only covers its live tokens, so grid steps past the
     # allocated prefix cost no MXU work
     @pl.when(jnp.any(valid))
     def _compute():
+        bs = k.shape[0]
         s = jax.lax.dot_general(
             q.astype(jnp.float32), k.astype(jnp.float32),
             (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale       # (G, bs)
-        s = jnp.where(valid, s, NEG_INF)
+            preferred_element_type=jnp.float32) * scale       # (T*G, bs)
+        mask = jnp.broadcast_to(valid[:, None, :],
+                                (q_tokens, group, bs)).reshape(-1, bs)
+        s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -196,66 +224,69 @@ def paged_decode_attention(q, k, v, q_pos, k_pos, block_tables, *,
                            window: Optional[int] = None,
                            scale: Optional[float] = None,
                            interpret: bool = False):
-    """Paged decode attention: gather K/V through a block table per grid step.
+    """Paged cached attention: gather K/V through a block table per grid step.
 
-    q: (B, 1, H, hd) or (B, H, hd); k, v: (N, bs, KV, hd) global block pool
-    (block 0 is the engines' trash block); k_pos: (N, bs) per-token positions
-    (−1 = never written); block_tables: (B, M) int32 physical block ids per
-    slot (−1 = unallocated). Returns attention output shaped like q.
+    q: (B, T, H, hd) or (B, H, hd) (T = 1); k, v: (N, bs, KV, hd) global
+    block pool (block 0 is the engines' trash block); q_pos: (B,) chunk
+    start positions or (B, T) per-token positions; k_pos: (N, bs) per-token
+    positions (−1 = never written); block_tables: (B, M) int32 physical
+    block ids per slot (−1 = unallocated). Returns output shaped like q.
 
     Same streaming-softmax carry, GQA group folding and masked-block skip as
     the ring kernel; the only difference is that the KV tile for grid step
     ``ik`` is DMA'd from pool block ``block_tables[b, ik]`` (scalar-prefetch
     index map) instead of a contiguous slice of a per-slot ring.
     """
-    squeeze = q.ndim == 4
-    if squeeze:
-        assert q.shape[1] == 1, "decode kernel takes a single query token"
-        q = q[:, 0]
-    b, h, hd = q.shape
+    no_time = q.ndim == 3
+    if no_time:
+        q = q[:, None]
+    b, t, h, hd = q.shape
     n, bs, kv = k.shape[0], k.shape[1], k.shape[2]
     assert h % kv == 0
     g = h // kv
     m = block_tables.shape[1]
     scale = scale if scale is not None else hd ** -0.5
 
-    qg = q.reshape(b, kv, g, hd)
-    qp = jnp.asarray(q_pos, jnp.int32).reshape(b, 1)
+    qg = jnp.moveaxis(q.reshape(b, t, kv, g, hd), 2, 1).reshape(
+        b, kv, t * g, hd)
+    qp = _chunk_positions(q_pos, b, t)
     kp = jnp.asarray(k_pos, jnp.int32)
     bt = jnp.asarray(block_tables, jnp.int32)
 
     kernel = functools.partial(_paged_kernel, scale=scale, window=window,
-                               num_k=m)
+                               num_k=m, q_tokens=t, group=g)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kv, m),
         in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, ik, bt_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, t * g, hd),
+                         lambda b_, h_, ik, bt_: (b_, h_, 0, 0)),
             pl.BlockSpec((1, bs, 1, hd),
                          lambda b_, h_, ik, bt_: (
                              jnp.maximum(bt_[b_, ik], 0), 0, h_, 0)),
             pl.BlockSpec((1, bs, 1, hd),
                          lambda b_, h_, ik, bt_: (
                              jnp.maximum(bt_[b_, ik], 0), 0, h_, 0)),
-            pl.BlockSpec((1, 1), lambda b_, h_, ik, bt_: (b_, 0)),
+            pl.BlockSpec((1, t), lambda b_, h_, ik, bt_: (b_, 0)),
             pl.BlockSpec((1, bs), lambda b_, h_, ik, bt_: (
                 jnp.maximum(bt_[b_, ik], 0), 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, hd),
+        out_specs=pl.BlockSpec((1, 1, t * g, hd),
                                lambda b_, h_, ik, bt_: (b_, h_, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, hd), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((t * g, hd), jnp.float32),
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, 1), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kv, t * g, hd), q.dtype),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(bt, qg, k, v, qp, kp)
-    out = out.reshape(b, h, hd)
-    return out[:, None] if squeeze else out
+    out = jnp.moveaxis(out.reshape(b, kv, t, g, hd), 1, 2).reshape(
+        b, t, h, hd)
+    return out[:, 0] if no_time else out

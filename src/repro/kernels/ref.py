@@ -48,31 +48,46 @@ def flash_attention_streaming_ref(q, k, v, *, causal: bool = True,
                                scale=q.shape[-1] ** -0.5, kv_chunk=kv_chunk)
 
 
+def query_positions(q_pos, t: int) -> jnp.ndarray:
+    """Normalize query positions to (B, T): a (B,) vector is treated as the
+    *start* position of a T-token chunk (per-token positions start + i); a
+    (B, T) array is taken as-is."""
+    qp = jnp.asarray(q_pos, jnp.int32)
+    if qp.ndim == 1:
+        qp = qp[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    return qp
+
+
 def decode_attention_ref(q, k, v, q_pos, k_pos, *,
                          window: Optional[int] = None,
                          scale: Optional[float] = None) -> jnp.ndarray:
-    """Dense single-token decode attention over a ring KV cache.
+    """Dense cached attention over a ring KV cache: one decode token or a
+    T-token prompt chunk per slot.
 
-    q: (B, 1, H, hd) or (B, H, hd); k, v: (B, W, KV, hd); q_pos: (B,);
-    k_pos: (B, W) with −1 marking empty cache slots.
+    q: (B, T, H, hd) or (B, H, hd) (T = 1); k, v: (B, W, KV, hd);
+    q_pos: (B,) chunk start positions or (B, T) per-token positions;
+    k_pos: (B, W) with −1 marking empty cache slots. The chunk's own K/V
+    are expected to already be appended to the cache (append-then-attend),
+    so intra-chunk causality falls out of position masking.
     """
-    squeeze = q.ndim == 4
-    if squeeze:
-        q = q[:, 0]
-    b, h, hd = q.shape
+    no_time = q.ndim == 3
+    if no_time:
+        q = q[:, None]
+    b, t, h, hd = q.shape
     kv = k.shape[2]
     g = h // kv
     scale = scale if scale is not None else hd ** -0.5
-    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
-    s = jnp.einsum("bkgd,bckd->bkgc", qg, k.astype(jnp.float32)) * scale
-    valid = (k_pos >= 0) & (k_pos <= q_pos[:, None])
+    qp = query_positions(q_pos, t)
+    qg = q.reshape(b, t, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("btkgd,bckd->btkgc", qg, k.astype(jnp.float32)) * scale
+    valid = (k_pos[:, None, :] >= 0) & (k_pos[:, None, :] <= qp[:, :, None])
     if window is not None:
-        valid &= k_pos > (q_pos[:, None] - window)
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+        valid &= k_pos[:, None, :] > (qp[:, :, None] - window)
+    s = jnp.where(valid[:, :, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))
-    o = o.reshape(b, h, hd).astype(q.dtype)
-    return o[:, None] if squeeze else o
+    o = jnp.einsum("btkgc,bckd->btkgd", p, v.astype(jnp.float32))
+    o = o.reshape(b, t, h, hd).astype(q.dtype)
+    return o[:, 0] if no_time else o
 
 
 def gather_paged_kv(pool, pos, block_tables):
@@ -97,13 +112,14 @@ def gather_paged_kv(pool, pos, block_tables):
 def paged_decode_attention_ref(q, k, v, q_pos, k_pos, block_tables, *,
                                window: Optional[int] = None,
                                scale: Optional[float] = None) -> jnp.ndarray:
-    """Dense single-token decode attention over a paged KV pool.
+    """Dense cached attention over a paged KV pool (decode or prompt chunk).
 
-    q: (B, 1, H, hd) or (B, H, hd); k, v: (N, bs, KV, hd) global block pool;
-    q_pos: (B,); k_pos: (N, bs) with −1 marking never-written tokens;
-    block_tables: (B, M) with −1 marking unallocated entries. The contract:
-    gathering each slot's blocks into a contiguous cache and running the
-    ring oracle must equal the paged Pallas kernel.
+    q: (B, T, H, hd) or (B, H, hd) (T = 1); k, v: (N, bs, KV, hd) global
+    block pool; q_pos: (B,) chunk starts or (B, T) per-token positions;
+    k_pos: (N, bs) with −1 marking never-written tokens; block_tables:
+    (B, M) with −1 marking unallocated entries. The contract: gathering
+    each slot's blocks into a contiguous cache and running the ring oracle
+    must equal the paged Pallas kernel.
     """
     kc, pc = gather_paged_kv(k, k_pos, block_tables)
     vc, _ = gather_paged_kv(v, k_pos, block_tables)
@@ -112,11 +128,15 @@ def paged_decode_attention_ref(q, k, v, q_pos, k_pos, block_tables, *,
     # a freed slot's table is all −1: nothing is valid, and the kernel's
     # streaming accumulator stays zero — pin the oracle to the same value
     # instead of the dense softmax's uniform-over-garbage row
-    valid = (pc >= 0) & (pc <= q_pos[:, None])
+    t = 1 if q.ndim == 3 else q.shape[1]
+    qp = query_positions(q_pos, t)                       # (B, T)
+    valid = (pc[:, None, :] >= 0) & (pc[:, None, :] <= qp[:, :, None])
     if window is not None:
-        valid &= pc > (q_pos[:, None] - window)
-    any_valid = jnp.any(valid, axis=1)
-    shape = (q.shape[0],) + (1,) * (out.ndim - 1)
+        valid &= pc[:, None, :] > (qp[:, :, None] - window)
+    any_valid = jnp.any(valid, axis=2)                   # (B, T)
+    if q.ndim == 3:
+        any_valid = any_valid[:, 0]
+    shape = any_valid.shape + (1,) * (out.ndim - any_valid.ndim)
     return jnp.where(any_valid.reshape(shape), out, 0).astype(out.dtype)
 
 

@@ -313,21 +313,46 @@ def cache_write(cache: dict, k1, v1, cur_pos) -> dict:
     return _ring_layout().append(cache, {"k": k1, "v": v1}, cur_pos)
 
 
-def cache_fill(cache: dict, k, v, seq_len: int) -> dict:
-    """Populate a cache from prefill outputs k, v: (B, S, KV, hd)."""
+def _fill_slots(width: int, b: int, s: int, lengths):
+    """Ring-fill bookkeeping shared by GQA and MLA prefill caches.
+
+    Keeps each row's trailing ``width`` *real* positions
+    (``[length - width, length)``), ring-ordered by ``t % width``; everything
+    else — right-pads and evicted older tokens — routes to out-of-bounds
+    index ``width`` so the scatter drops it. Without per-row lengths a
+    bucket-padded prompt through a ``window``-wide cache used to keep the
+    trailing window of the *padded* sequence: real in-window tokens were
+    evicted by pad rows, silently corrupting windowed decode.
+    Returns (rows (B, 1), slot (B, S), pos_val (B, S))."""
+    t = jnp.arange(s, dtype=jnp.int32)[None, :]
+    if lengths is None:
+        length = jnp.full((b, 1), s, jnp.int32)
+    else:
+        length = jnp.asarray(lengths, jnp.int32).reshape(b, 1)
+    keep = (t >= length - width) & (t < length)
+    slot = jnp.where(keep, t % width, width)           # width = dropped
+    rows = jnp.arange(b)[:, None]
+    return rows, slot, jnp.broadcast_to(t, (b, s))
+
+
+def cache_fill(cache: dict, k, v, seq_len: int, lengths=None) -> dict:
+    """Populate a cache from prefill outputs k, v: (B, S, KV, hd).
+    ``lengths``: optional (B,) true prompt lengths — positions ≥ length are
+    right-pad and must never occupy a ring slot (see ``_fill_slots``).
+    Callers pass lengths when any layer is windowed (width < padded
+    sequence); unwindowed installs keep the cheaper contiguous write, whose
+    pad entries the decode stream provably overwrites before visibility."""
     width = cache["k"].shape[1]
     b, s = k.shape[0], k.shape[1]
-    if s >= width:
-        # keep the trailing ``width`` positions, ring-ordered by t % width
-        t = jnp.arange(s - width, s)
-        slots = t % width
-        kw = jnp.zeros_like(cache["k"]).at[:, slots].set(k[:, s - width:])
-        vw = jnp.zeros_like(cache["v"]).at[:, slots].set(v[:, s - width:])
-        pos = jnp.full((b, width), -1, jnp.int32).at[:, slots].set(t[None, :])
-    else:
+    if lengths is None and s <= width:
         kw = cache["k"].at[:, :s].set(k)
         vw = cache["v"].at[:, :s].set(v)
         pos = cache["pos"].at[:, :s].set(jnp.arange(s)[None, :])
+        return {"k": kw, "v": vw, "pos": pos}
+    rows, slot, pos_val = _fill_slots(width, b, s, lengths)
+    kw = jnp.zeros_like(cache["k"]).at[rows, slot].set(k)
+    vw = jnp.zeros_like(cache["v"]).at[rows, slot].set(v)
+    pos = jnp.full((b, width), -1, jnp.int32).at[rows, slot].set(pos_val)
     return {"k": kw, "v": vw, "pos": pos}
 
 
@@ -378,18 +403,25 @@ def attn_forward(params, cfg, x, positions, *, window: Optional[int],
 
 
 def attn_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int],
-                layout=None, block_tables=None):
-    """One-token decode. x: (B, 1, D); ``cur_pos``: scalar or (B,) per-request
-    positions. ``layout`` is a KV-cache layout from
-    ``repro.serving.kv_cache`` (None = ring); for the paged layout ``cache``
-    is the (N, bs, ...) block pool and ``block_tables`` (B, M) maps each
-    request's logical blocks to pool blocks."""
+                layout=None, block_tables=None, valid=None):
+    """Cached-attention step: one decode token or a T-token prompt chunk.
+    x: (B, T, D); ``cur_pos``: scalar or (B,) per-request *start* positions
+    (token i of the chunk sits at position ``cur_pos + i``); ``valid``:
+    optional (B, T) write mask (False = right-pad / inactive slot — the
+    token neither lands in the cache nor matters downstream). ``layout`` is
+    a KV-cache layout from ``repro.serving.kv_cache`` (None = ring); for
+    the paged layout ``cache`` is the (N, bs, ...) block pool and
+    ``block_tables`` (B, M) maps each request's logical blocks to pool
+    blocks. Append happens *before* attend, so intra-chunk causality is
+    ordinary position masking."""
     layout = _ring_layout() if layout is None else layout
-    b = x.shape[0]
-    positions = positions_1d(cur_pos, b)[:, None]
+    b, t = x.shape[0], x.shape[1]
+    start = positions_1d(cur_pos, b)
+    positions = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
     q, k1, v1 = _qkv(params, cfg, x, positions)
-    cache = layout.append(cache, {"k": k1, "v": v1}, cur_pos, block_tables)
-    out = layout.attend(q, cache, positions[:, 0], block_tables,
+    cache = layout.append(cache, {"k": k1, "v": v1}, start, block_tables,
+                          valid=valid)
+    out = layout.attend(q, cache, positions, block_tables,
                         window=window, scale=cfg.resolved_head_dim ** -0.5)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, cache
@@ -485,57 +517,60 @@ def init_mla_cache(cfg, batch: int, width: int, dtype) -> dict:
     }
 
 
-def mla_cache_fill(cache: dict, ckv, krope, seq_len: int) -> dict:
+def mla_cache_fill(cache: dict, ckv, krope, seq_len: int,
+                   lengths=None) -> dict:
     width = cache["ckv"].shape[1]
     b, s = ckv.shape[0], ckv.shape[1]
-    if s >= width:
-        t = jnp.arange(s - width, s)
-        slots = t % width
-        ckw = jnp.zeros_like(cache["ckv"]).at[:, slots].set(ckv[:, s - width:])
-        krw = jnp.zeros_like(cache["krope"]).at[:, slots].set(krope[:, s - width:])
-        pos = jnp.full((b, width), -1, jnp.int32).at[:, slots].set(t[None, :])
-    else:
+    if lengths is None and s <= width:
         ckw = cache["ckv"].at[:, :s].set(ckv)
         krw = cache["krope"].at[:, :s].set(krope)
         pos = cache["pos"].at[:, :s].set(jnp.arange(s)[None, :])
+        return {"ckv": ckw, "krope": krw, "pos": pos}
+    rows, slot, pos_val = _fill_slots(width, b, s, lengths)
+    ckw = jnp.zeros_like(cache["ckv"]).at[rows, slot].set(ckv)
+    krw = jnp.zeros_like(cache["krope"]).at[rows, slot].set(krope)
+    pos = jnp.full((b, width), -1, jnp.int32).at[rows, slot].set(pos_val)
     return {"ckv": ckw, "krope": krw, "pos": pos}
 
 
 def mla_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int],
-               layout=None, block_tables=None):
+               layout=None, block_tables=None, valid=None):
     """Absorbed-form MLA decode: score/value math in the latent space, so the
     cache stays compressed (kv_lora + rope dims) — the paper-relevant memory
     saving of MLA. The attend runs over ``layout.context`` (identity for the
     ring; a block-table gather for the paged layout), so both cache layouts
-    share one attention formulation."""
+    share one attention formulation. Like ``attn_decode``, x may carry a
+    T-token prompt chunk starting at ``cur_pos`` with an optional (B, T)
+    write-validity mask."""
     layout = _ring_layout() if layout is None else layout
     m = cfg.mla
-    b = x.shape[0]
-    cur = positions_1d(cur_pos, b)
-    positions = cur[:, None]
-    q_nope, q_rope = _mla_q(params, cfg, x, positions)          # (B,1,H,*)
-    ckv1, krope1 = _mla_kv_latent(params, cfg, x, positions)    # (B,1,r)
-    cache = layout.append(cache, {"ckv": ckv1, "krope": krope1}, cur_pos,
-                          block_tables)
+    b, t = x.shape[0], x.shape[1]
+    start = positions_1d(cur_pos, b)
+    positions = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None]
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)          # (B,T,H,*)
+    ckv1, krope1 = _mla_kv_latent(params, cfg, x, positions)    # (B,T,r)
+    cache = layout.append(cache, {"ckv": ckv1, "krope": krope1}, start,
+                          block_tables, valid=valid)
     ctx = layout.context(cache, block_tables)   # (B, C, ...) per-slot view
     ckv_c, krope_c, pos_c = ctx["ckv"], ctx["krope"], ctx["pos"]
-    # absorb W_uk into q: q_lat (B,H,r)
-    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["w_uk"])
-    s_nope = jnp.einsum("bhr,bcr->bhc", q_lat,
+    # absorb W_uk into q: q_lat (B,T,H,r)
+    q_lat = jnp.einsum("bthk,rhk->bthr", q_nope, params["w_uk"])
+    s_nope = jnp.einsum("bthr,bcr->bthc", q_lat,
                         ckv_c.astype(q_lat.dtype),
                         preferred_element_type=jnp.float32)
-    s_rope = jnp.einsum("bhk,bck->bhc", q_rope[:, 0],
+    s_rope = jnp.einsum("bthk,bck->bthc", q_rope,
                         krope_c.astype(q_rope.dtype),
                         preferred_element_type=jnp.float32)
     qk = m.qk_nope_head_dim + m.qk_rope_head_dim
     s = (s_nope + s_rope) * (qk ** -0.5)
-    valid = (pos_c <= positions) & (pos_c >= 0)
+    ok = (pos_c[:, None, :] <= positions[:, :, None]) & \
+        (pos_c[:, None, :] >= 0)
     if window is not None:
-        valid &= pos_c > (positions - window)
-    s = jnp.where(valid[:, None, :], s, NEG_INF)
+        ok &= pos_c[:, None, :] > (positions[:, :, None] - window)
+    s = jnp.where(ok[:, :, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o_lat = jnp.einsum("bhc,bcr->bhr", p.astype(ckv_c.dtype),
+    o_lat = jnp.einsum("bthc,bcr->bthr", p.astype(ckv_c.dtype),
                        ckv_c, preferred_element_type=jnp.float32)
-    out = jnp.einsum("bhr,rhk->bhk", o_lat.astype(x.dtype), params["w_uv"])
-    y = jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None, :]
+    out = jnp.einsum("bthr,rhk->bthk", o_lat.astype(x.dtype), params["w_uv"])
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
     return y, cache

@@ -78,8 +78,10 @@ def _mlp_apply(bdef: BlockDef, params, cfg, x, capacity_factor: float):
 
 def _block_forward(bdef: BlockDef, params, cfg, x, positions, *,
                    want_cache: bool, cache_width: Optional[int],
-                   kv_chunk: int, capacity_factor: float):
-    """Full-sequence block. Returns (x, cache_or_None, aux)."""
+                   kv_chunk: int, capacity_factor: float, lengths=None):
+    """Full-sequence block. Returns (x, cache_or_None, aux). ``lengths``:
+    optional (B,) true sequence lengths so cache install never keeps
+    right-pad rows (see ``attention._fill_slots``)."""
     b = x.shape[0]
     cache = None
     if bdef.mixer == ATTN:
@@ -91,7 +93,7 @@ def _block_forward(bdef: BlockDef, params, cfg, x, positions, *,
             width = _attn_width(bdef, cache_width)
             cache = att.init_kv_cache(b, width, cfg.num_kv_heads,
                                       cfg.resolved_head_dim, k.dtype)
-            cache = att.cache_fill(cache, k, v, x.shape[1])
+            cache = att.cache_fill(cache, k, v, x.shape[1], lengths)
     elif bdef.mixer == MLA:
         h = rmsnorm(params["norm1"], x, cfg.rms_eps)
         y, (ckv, krope) = att.mla_forward(params["mixer"], cfg, h, positions,
@@ -100,7 +102,8 @@ def _block_forward(bdef: BlockDef, params, cfg, x, positions, *,
         if want_cache:
             width = _attn_width(bdef, cache_width)
             cache = att.init_mla_cache(cfg, b, width, ckv.dtype)
-            cache = att.mla_cache_fill(cache, ckv, krope, x.shape[1])
+            cache = att.mla_cache_fill(cache, ckv, krope, x.shape[1],
+                                       lengths)
     elif bdef.mixer == RGLRU:
         h = rmsnorm(params["norm1"], x, cfg.rms_eps)
         y, state = rec.rglru_block_forward(params["mixer"], cfg, h)
@@ -121,18 +124,19 @@ def _block_forward(bdef: BlockDef, params, cfg, x, positions, *,
 
 
 def _block_decode(bdef: BlockDef, params, cfg, x1, cache, cur_pos, *,
-                  capacity_factor: float, layout=None, block_tables=None):
+                  capacity_factor: float, layout=None, block_tables=None,
+                  valid=None):
     if bdef.mixer == ATTN:
         h = rmsnorm(params["norm1"], x1, cfg.rms_eps)
         y, cache = att.attn_decode(params["mixer"], cfg, h, cache, cur_pos,
                                    window=bdef.window, layout=layout,
-                                   block_tables=block_tables)
+                                   block_tables=block_tables, valid=valid)
         x1 = x1 + y
     elif bdef.mixer == MLA:
         h = rmsnorm(params["norm1"], x1, cfg.rms_eps)
         y, cache = att.mla_decode(params["mixer"], cfg, h, cache, cur_pos,
                                   window=bdef.window, layout=layout,
-                                  block_tables=block_tables)
+                                  block_tables=block_tables, valid=valid)
         x1 = x1 + y
     elif bdef.mixer == RGLRU:
         h = rmsnorm(params["norm1"], x1, cfg.rms_eps)
@@ -306,9 +310,10 @@ class LM:
     # -- full-sequence forward ---------------------------------------------
     def forward(self, params, batch, *, want_cache: bool = False,
                 cache_width: Optional[int] = None, train: bool = False,
-                last_only: bool = False):
+                last_only: bool = False, lengths=None):
         """Returns (logits, caches, aux_loss). ``last_only`` unembeds just
-        the final position (serving prefill — §Perf B2)."""
+        the final position (serving prefill — §Perf B2); ``lengths`` is the
+        optional (B,) true-length vector for pad-free cache install."""
         cfg = self.cfg
         x, positions = self._embed_inputs(params, batch)
         x = sh.hint(x, (sh.BATCH, sh.SEQ, None))
@@ -317,7 +322,8 @@ class LM:
         for stage, stage_params in zip(cfg.stages, params["stages"]):
             x, stage_caches, stage_aux = self._stage_forward(
                 stage, stage_params, x, positions,
-                want_cache=want_cache, cache_width=cache_width, train=train)
+                want_cache=want_cache, cache_width=cache_width, train=train,
+                lengths=lengths)
             caches.append(stage_caches)
             aux = aux + stage_aux
         x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
@@ -326,7 +332,7 @@ class LM:
 
     def _stage_forward(self, stage: Stage, stage_params, x, positions, *,
                        want_cache: bool, cache_width: Optional[int],
-                       train: bool):
+                       train: bool, lengths=None):
         cfg = self.cfg
 
         def body2(carry, layer_params):
@@ -337,7 +343,7 @@ class LM:
                     bdef, layer_params[f"b{i}"], cfg, h, positions,
                     want_cache=want_cache, cache_width=cache_width,
                     kv_chunk=self.kv_chunk,
-                    capacity_factor=self.capacity_factor)
+                    capacity_factor=self.capacity_factor, lengths=lengths)
                 aux = aux + a
                 h = sh.hint(h, (sh.BATCH, sh.SEQ, None))
                 layer_caches.append(cache)
@@ -370,15 +376,51 @@ class LM:
         return caches
 
     def decode_step(self, params, caches, tokens, cur_pos, *,
-                    layout=None, block_tables=None):
+                    layout=None, block_tables=None, valid=None):
         """One-token decode. tokens: (B, 1) (audio: (B, 1, C));
         ``cur_pos``: scalar or (B,) per-request positions (continuous
         batching decodes slots at different depths in one step).
         ``layout``/``block_tables`` select the KV-cache layout
-        (``repro.serving.kv_cache``; None = per-slot ring caches).
+        (``repro.serving.kv_cache``; None = per-slot ring caches);
+        ``valid`` is an optional (B, 1) mask — False rows compute logits
+        but leave the cache untouched (inactive serving slots).
         Returns (logits (B, 1, V...), new caches)."""
+        return self.prefill_chunk(params, caches, tokens, cur_pos,
+                                  layout=layout, block_tables=block_tables,
+                                  valid=valid)
+
+    def prefill_chunk(self, params, caches, tokens, start_pos, *,
+                      layout=None, block_tables=None, valid=None,
+                      logits_index=None):
+        """Resume prefill with a T-token prompt chunk per slot (the chunked
+        half of the serving scheduler; T = 1 is exactly ``decode_step``).
+
+        tokens: (B, T); ``start_pos``: scalar or (B,) per-slot positions of
+        the chunk's first token — token i sits at ``start_pos + i`` and
+        attends to every previously installed position plus the chunk's own
+        earlier tokens (K/V are appended before attending, so intra-chunk
+        causality is ordinary position masking). ``valid``: (B, T) mask for
+        right-padded chunk shapes; invalid tokens never touch the cache and
+        their logits are garbage the caller must ignore.
+        ``logits_index``: optional (B,) chunk-local index — unembed only
+        that position per row (the engine only ever samples from the final
+        real token, and the vocab projection would otherwise dominate a
+        chunk's cost at production vocab sizes). Returns
+        (logits (B, T, V...) or (B, 1, V...) with logits_index, caches).
+
+        Chunks longer than one token require attention mixers (recurrent
+        states fold tokens sequentially; their decode path is T = 1 only).
+        """
         cfg = self.cfg
-        cur_pos = att.positions_1d(cur_pos, tokens.shape[0])
+        t = tokens.shape[1]
+        if t > 1:
+            for stage in cfg.stages:
+                for bdef in stage.blocks:
+                    if bdef.mixer not in (ATTN, MLA):
+                        raise NotImplementedError(
+                            f"prefill_chunk needs attention mixers "
+                            f"(got {bdef.mixer!r}); chunk length must be 1")
+        start_pos = att.positions_1d(start_pos, tokens.shape[0])
         batch = {"tokens": tokens}
         if cfg.frontend.kind == "vision":
             # decode consumes plain text tokens; vision prefix lives in cache
@@ -395,23 +437,30 @@ class LM:
                 for i, bdef in enumerate(_stage.blocks):
                     h, c = _block_decode(
                         bdef, layer_params[f"b{i}"], cfg, h, layer_cache[i],
-                        cur_pos, capacity_factor=self.capacity_factor,
-                        layout=layout, block_tables=block_tables)
+                        start_pos, capacity_factor=self.capacity_factor,
+                        layout=layout, block_tables=block_tables,
+                        valid=valid)
                     new_layer.append(c)
                 return h, tuple(new_layer)
 
             x, nc = jax.lax.scan(body, x, (stage_params, stage_cache))
             new_caches.append(nc)
         x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+        if logits_index is not None:
+            idx = att.positions_1d(logits_index, x.shape[0])
+            x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         logits = self._logits(params, x)
         return logits, new_caches
 
     def prefill(self, params, batch, cache_width: int,
-                last_only: bool = False):
-        """Full forward that also returns populated caches."""
+                last_only: bool = False, lengths=None):
+        """Full forward that also returns populated caches. ``lengths``:
+        optional (B,) true prompt lengths — right-pad rows then never land
+        in a ring slot (load-bearing for windowed layers, whose cache is
+        narrower than a padded bucket)."""
         logits, caches, aux, _ = self.forward(
             params, batch, want_cache=True, cache_width=cache_width,
-            last_only=last_only)
+            last_only=last_only, lengths=lengths)
         return logits, caches
 
     # -- losses ---------------------------------------------------------------

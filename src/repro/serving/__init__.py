@@ -1,12 +1,19 @@
 from repro.serving.engine import (DrainBatchEngine, Request, ServingEngine,
-                                  bucket_for, prompt_buckets, validate_prompt)
+                                  validate_prompt)
 from repro.serving.cascade_engine import CascadeEngine, CascadeServingEngine
 from repro.serving.kv_cache import (KVCacheBackend, PagedCache, PagedLayout,
                                     RING, RingCache, RingLayout, make_backend)
-from repro.serving.sampler import sample_logits, sample_logits_batch
+from repro.serving.sampler import (request_keys, sample_logits,
+                                   sample_logits_batch, sample_logits_keyed)
+from repro.serving.scheduler import (ChunkTask, PrefillProgress, Scheduler,
+                                     StepPlan, bucket_for, chunk_buckets,
+                                     prompt_buckets)
 
 __all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
            "CascadeServingEngine", "sample_logits", "sample_logits_batch",
-           "prompt_buckets", "bucket_for", "validate_prompt",
+           "sample_logits_keyed", "request_keys",
+           "prompt_buckets", "bucket_for", "chunk_buckets",
+           "validate_prompt", "Scheduler", "StepPlan", "ChunkTask",
+           "PrefillProgress",
            "KVCacheBackend", "RingCache", "PagedCache", "RingLayout",
            "PagedLayout", "RING", "make_backend"]

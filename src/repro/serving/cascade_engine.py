@@ -90,22 +90,27 @@ class CascadeServingEngine:
                  eos_id: Optional[int] = None, seed: int = 0,
                  cache_backend="ring", block_size: int = 16,
                  num_pool_blocks: Optional[int] = None,
-                 truncate_prompts: bool = False):
+                 truncate_prompts: bool = False,
+                 chunk_tokens: Optional[int] = None,
+                 token_budget: Optional[int] = None,
+                 prefix_sharing: bool = True):
         from repro.serving.engine import ServingEngine
         self.cascade = cascade
         self.max_seq_len = max_seq_len
         self.truncate_prompts = truncate_prompts
         self.metrics = CascadeMetrics()
-        self.edge_engine = ServingEngine(
-            cascade.edge, edge_params, batch_slots=batch_slots,
-            max_seq_len=max_seq_len, eos_id=eos_id, seed=seed,
-            cache_backend=cache_backend, block_size=block_size,
-            num_pool_blocks=num_pool_blocks)
-        self.cloud_engine = ServingEngine(
-            cascade.cloud, cloud_params, batch_slots=batch_slots,
-            max_seq_len=max_seq_len, eos_id=eos_id, seed=seed + 1,
-            cache_backend=cache_backend, block_size=block_size,
-            num_pool_blocks=num_pool_blocks)
+        # both engines execute the same scheduler policy (token budget /
+        # chunked prefill / prefix sharing flow straight through)
+        engine_kw = dict(batch_slots=batch_slots, max_seq_len=max_seq_len,
+                         eos_id=eos_id, cache_backend=cache_backend,
+                         block_size=block_size,
+                         num_pool_blocks=num_pool_blocks,
+                         chunk_tokens=chunk_tokens, token_budget=token_budget,
+                         prefix_sharing=prefix_sharing)
+        self.edge_engine = ServingEngine(cascade.edge, edge_params,
+                                         seed=seed, **engine_kw)
+        self.cloud_engine = ServingEngine(cascade.cloud, cloud_params,
+                                          seed=seed + 1, **engine_kw)
 
         def gate(params, tokens, length):
             # bucketed like engine prefill: right-padded, gate on the last

@@ -11,17 +11,34 @@ done-detection all on device — and the Python loop performs a single small
 host sync per step (the (B,) active mask) for EOS/slot management; logits
 never leave the device.
 
+Scheduling policy lives in ``repro.serving.scheduler``: each step the
+``Scheduler`` composes a mixed batch under a token budget — decode tokens
+for the active slots plus prompt *chunks* for admitting requests — and the
+engine merely executes the plan. With ``chunk_tokens=None`` (default) the
+plan degenerates to the legacy admit-whole-bucket-then-decode behavior;
+with chunking enabled a long prompt prefills incrementally across steps
+(``LM.prefill_chunk``), so a burst of arrivals no longer stalls in-flight
+decodes for a monolithic prefill. Either way outputs are token-exact.
+
 Prompts are right-padded to their bucket. With the ring cache this is
 *exact*: pad entries sit at positions ≥ the prompt length, causal masking
 hides them until the decode stream overwrites their ring slot at that same
-position, so bucketing never changes a single output token.
+position, so bucketing never changes a single output token. Chunk shapes
+are bucketed the same way, and chunk pads are masked out of the cache
+entirely (``valid``), so chunking is exact too.
 
 The KV cache itself is pluggable (``repro.serving.kv_cache``): admission
 grants a slot *plus* whatever device memory the backend needs for it. The
 ``ring`` backend (default) pins a ``max_seq_len`` cache line per slot; the
 ``paged`` backend reserves ``ceil((prompt + budget) / block_size)`` pool
 blocks per request and returns them at completion, so concurrency is
-bounded by live tokens rather than worst-case sequence length.
+bounded by live tokens rather than worst-case sequence length — and, with
+chunked prefill, requests sharing a full-block prompt prefix share the
+physical blocks (refcounted, copy-on-write) and skip recomputing them.
+
+Sampling keys are derived per request (``request_id`` × decode step), so
+temperature > 0 outputs are a pure function of the request: co-scheduling,
+admission order and chunking never change a sampled stream.
 
 ``DrainBatchEngine`` preserves the previous drain-the-queue batcher (pad
 the batch to its longest prompt, run everyone for the longest budget,
@@ -30,6 +47,7 @@ round-trip logits to the host each token) as the measured baseline for
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -38,9 +56,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import ATTN, MLA
 from repro.models.model import LM
-from repro.serving.kv_cache import make_backend
-from repro.serving.sampler import sample_logits, sample_logits_batch
+from repro.serving.kv_cache import RingLayout, make_backend
+from repro.serving.sampler import (request_keys, sample_logits_batch,
+                                   sample_logits_keyed)
+from repro.serving.scheduler import (MONOLITHIC, PrefillProgress, Scheduler,
+                                     bucket_for, prompt_buckets)
 
 
 @dataclasses.dataclass
@@ -54,27 +76,16 @@ class Request:
     admit_s: float = 0.0         # wall-clock when a slot was granted
     finish_s: float = 0.0        # wall-clock at completion
     latency_s: float = 0.0       # finish - submit (queue + service)
+    ttft_s: float = 0.0          # submit -> first generated token exists
 
 
-def prompt_buckets(max_seq_len: int, min_bucket: int = 16) -> List[int]:
-    """Power-of-two prefill shapes: [min_bucket, ..., max_seq_len]."""
-    buckets = []
-    b = min_bucket
-    while b < max_seq_len:
-        buckets.append(b)
-        b *= 2
-    buckets.append(max_seq_len)
-    return buckets
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
 
 
-def bucket_for(n: int, buckets: List[int]) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    raise ValueError(
-        f"prompt length {n} exceeds the largest prefill bucket "
-        f"{buckets[-1]} (= max_seq_len); engines validate this at submit() "
-        f"— either raise max_seq_len or submit with truncation enabled")
+def _has_windowed_blocks(lm: LM) -> bool:
+    return any(bdef.window is not None
+               for stage in lm.cfg.stages for bdef in stage.blocks)
 
 
 def validate_prompt(prompt: np.ndarray, max_new_tokens: int,
@@ -113,7 +124,10 @@ class ServingEngine:
                  eos_id: Optional[int] = None, min_bucket: int = 16,
                  cache_backend="ring", block_size: int = 16,
                  num_pool_blocks: Optional[int] = None,
-                 truncate_prompts: bool = False):
+                 truncate_prompts: bool = False,
+                 chunk_tokens: Optional[int] = None,
+                 token_budget: Optional[int] = None,
+                 prefix_sharing: bool = True):
         if lm.cfg.frontend.kind == "audio":
             raise NotImplementedError("engine serves text-token streams")
         self.lm = lm
@@ -123,19 +137,41 @@ class ServingEngine:
         self.eos_id = eos_id
         self.truncate_prompts = truncate_prompts
         self.buckets = prompt_buckets(max_seq_len, min_bucket)
+        self._windowed = _has_windowed_blocks(lm)
         self._queue: List[Request] = []
         self._next_id = 0
-        self._rng = jax.random.PRNGKey(seed)
-        # perf counters (slot occupancy for bench_serving)
+        self._base_key = jax.random.PRNGKey(seed)
+        # serving state (step() advances it; run() drains it)
+        self._slots: Dict[int, Request] = {}
+        self._free: List[int] = list(range(batch_slots))
+        self._prefilling: Dict[int, PrefillProgress] = \
+            collections.OrderedDict()
+        self._done: Dict[int, Request] = {}
+        # perf counters (slot occupancy / prefix sharing for bench_serving)
         self.decode_steps = 0
         self.occupied_slot_steps = 0
         self.generated_tokens = 0
         self.peak_active_slots = 0
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_skipped = 0
 
+        if chunk_tokens is not None:
+            self._validate_chunk_mixers(chunk_tokens)
         self.backend = make_backend(
             cache_backend, lm, params, batch_slots=batch_slots,
             max_seq_len=max_seq_len, proto_len=self.buckets[0],
-            block_size=block_size, num_blocks=num_pool_blocks)
+            block_size=block_size, num_blocks=num_pool_blocks,
+            prefix_sharing=prefix_sharing)
+        if chunk_tokens is not None:
+            self._validate_chunk_layout()
+        self.scheduler = Scheduler(batch_slots=batch_slots,
+                                   chunk_tokens=chunk_tokens,
+                                   token_budget=token_budget)
+        # prefix sharing hashes prompt tokens at admission; only meaningful
+        # with chunked install (monolithic prefill recomputes everything)
+        self._admit_with_tokens = (
+            self.scheduler.chunked
+            and getattr(self.backend, "prefix_sharing", False))
         self._cache_state = self.backend.init()
         b, v = batch_slots, lm.cfg.padded_vocab
         self._state = {
@@ -144,11 +180,44 @@ class ServingEngine:
             "steps": jnp.zeros((b,), jnp.int32),
             "budget": jnp.zeros((b,), jnp.int32),
             "temp": jnp.zeros((b,), jnp.float32),
+            "rid": jnp.zeros((b,), jnp.int32),
             "active": jnp.zeros((b,), jnp.bool_),
             "out": jnp.zeros((b, max_seq_len), jnp.int32),
         }
-        self._admit_fn = jax.jit(self._admit_impl)      # retraces per bucket
-        self._step_fn = jax.jit(self._step_impl)
+        # cache/state buffers are engine-owned and reassigned from every
+        # call's output: donate them so XLA updates in place instead of
+        # copying the whole KV cache per step/chunk/admission
+        self._admit_fn = jax.jit(self._admit_impl,
+                                 donate_argnums=(1, 2))  # retraces per bucket
+        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2))
+        self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1, 2),
+                                 static_argnums=(12,))   # per (bucket, ctx)
+        self._begin_fn = jax.jit(self.backend.begin_slot, donate_argnums=0)
+        if hasattr(self.backend, "copy_block"):
+            self._copy_fn = jax.jit(self.backend.copy_block, donate_argnums=0)
+
+    def _validate_chunk_mixers(self, chunk_tokens: int) -> None:
+        if not (1 <= chunk_tokens <= self.max_seq_len):
+            raise ValueError(f"chunk_tokens ({chunk_tokens}) must be in "
+                             f"[1, max_seq_len={self.max_seq_len}]")
+        for stage in self.lm.cfg.stages:
+            for bdef in stage.blocks:
+                if bdef.mixer not in (ATTN, MLA):
+                    raise NotImplementedError(
+                        f"chunked prefill needs attention mixers (got "
+                        f"{bdef.mixer!r}); recurrent state folds tokens "
+                        f"sequentially — use chunk_tokens=None")
+
+    def _validate_chunk_layout(self) -> None:
+        if not isinstance(self.backend.layout, RingLayout):
+            return
+        for stage in self.lm.cfg.stages:
+            for bdef in stage.blocks:
+                if bdef.window is not None:
+                    raise NotImplementedError(
+                        "chunked prefill over windowed layers needs the "
+                        "paged backend: a window-wide ring evicts tokens "
+                        "the chunk's own queries still attend to")
 
     # -- queue API ------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
@@ -162,36 +231,82 @@ class ServingEngine:
         self._queue.append(r)
         return rid
 
+    def warm_compile(self) -> None:
+        """Pre-compile every chunk-program variant. Chunk programs retrace
+        per (chunk bucket × context bucket) — a small static product — and
+        an XLA compile landing mid-traffic (~1 s) would dominate some
+        request's TTFT. Each variant runs once against slot 0 with
+        ``max_new = 0`` and no table row installed, so nothing observable
+        changes (the junk K/V is wiped by the next admission's
+        ``begin_slot`` / monolithic install). Call while idle — before
+        serving traffic — never mid-run."""
+        if not self.scheduler.chunked:
+            return
+        for bucket in self.scheduler.buckets:
+            ctxs = set()
+            ctx = _next_pow2(bucket)
+            while ctx < self.max_seq_len:
+                ctxs.add(ctx)
+                ctx *= 2
+            ctxs.add(self.max_seq_len)
+            for ctx in sorted(ctxs):
+                self._cache_state, self._state = self._chunk_fn(
+                    self.params, self._cache_state, self._state,
+                    jnp.zeros((1, bucket), jnp.int32), jnp.int32(0),
+                    jnp.int32(1), jnp.int32(0), jnp.int32(1), jnp.int32(0),
+                    jnp.float32(0.0), jnp.int32(0), jnp.bool_(False), ctx)
+        if hasattr(self, "_copy_fn"):
+            # copying the trash block onto itself is a no-op by definition
+            self._cache_state = self._copy_fn(self._cache_state,
+                                              jnp.int32(0), jnp.int32(0))
+
+    @property
+    def pending(self) -> bool:
+        """Work outstanding: queued, prefilling, or decoding requests."""
+        return bool(self._queue or self._slots or self._prefilling)
+
+    def step(self) -> None:
+        """Execute one scheduler plan: admissions and prompt chunks first,
+        then the decode round. Public so drivers can interleave arrivals
+        with serving (see ``benchmarks/bench_serving.py``); ``run`` is just
+        this in a drain loop."""
+        slots, free, prefilling = self._slots, self._free, self._prefilling
+        plan = self.scheduler.plan_step(
+            n_active=len(slots), prefilling=prefilling,
+            try_admit=lambda: self._try_admit(slots, free, prefilling))
+        for c in plan.chunks:
+            self._run_chunk(c, prefilling, slots)
+        if slots:
+            self.peak_active_slots = max(self.peak_active_slots,
+                                         len(slots) + len(prefilling))
+            self._decode_round(slots, free, self._done)
+        elif not plan.chunks and not prefilling and self._queue:
+            # nothing running and the head of the queue can never fit
+            nxt = self._queue[0]
+            raise RuntimeError(
+                f"request {nxt.request_id} (prompt {len(nxt.prompt)} + "
+                f"budget {nxt.max_new_tokens}) needs more KV blocks than "
+                f"the whole pool holds; enlarge num_pool_blocks")
+
     def run(self) -> Dict[int, Request]:
-        """Serve until the queue and all slots drain."""
-        done: Dict[int, Request] = {}
-        slots: Dict[int, Request] = {}
-        free = list(range(self.batch_slots))
-        while self._queue or slots:
-            # admit FIFO while a slot AND its cache reservation are available
-            while free and self._queue:
-                nxt = self._queue[0]
-                if not self.backend.can_admit(len(nxt.prompt),
-                                              nxt.max_new_tokens):
-                    break
-                self._admit(self._queue.pop(0), free.pop(), slots)
-            if not slots:
-                # nothing running and the head of the queue can never fit
-                nxt = self._queue[0]
-                raise RuntimeError(
-                    f"request {nxt.request_id} (prompt {len(nxt.prompt)} + "
-                    f"budget {nxt.max_new_tokens}) needs more KV blocks than "
-                    f"the whole pool holds; enlarge num_pool_blocks")
-            self.peak_active_slots = max(self.peak_active_slots, len(slots))
-            self._decode_round(slots, free, done)
+        """Serve until the queue and all slots drain; returns every request
+        completed since the last ``run`` (``step`` completions included)."""
+        while self.pending:
+            self.step()
+        done, self._done = self._done, {}
         return done
 
     # -- device-side programs -------------------------------------------------
     def _admit_impl(self, params, cache_state, state, tokens, length, slot,
-                    max_new, temp, table_row):
-        """Prefill one bucketed prompt and install it into ``slot``."""
+                    max_new, temp, rid, table_row):
+        """Prefill one bucketed prompt and install it into ``slot``.
+        True lengths are threaded only for windowed models, where the
+        window-wide cache would otherwise keep the padded bucket's trailing
+        window and evict live tokens; unwindowed installs keep the cheaper
+        contiguous write (pad entries are overwritten before visibility)."""
         logits, one_caches = self.lm.prefill(
-            params, {"tokens": tokens}, cache_width=self.max_seq_len)
+            params, {"tokens": tokens}, cache_width=self.max_seq_len,
+            lengths=jnp.reshape(length, (1,)) if self._windowed else None)
         last = jax.lax.dynamic_index_in_dim(logits[0], length - 1, axis=0,
                                             keepdims=False)
         cache_state = self.backend.prefill_fill(cache_state, one_caches,
@@ -202,23 +317,57 @@ class ServingEngine:
         state["steps"] = state["steps"].at[slot].set(0)
         state["budget"] = state["budget"].at[slot].set(max_new)
         state["temp"] = state["temp"].at[slot].set(temp)
+        state["rid"] = state["rid"].at[slot].set(rid)
         state["active"] = state["active"].at[slot].set(max_new > 0)
         return cache_state, state
 
-    def _step_impl(self, params, cache_state, state, rng):
-        """Fused decode step: sample → append → done-detect, on device."""
+    def _chunk_impl(self, params, cache_state, state, tokens, start, length,
+                    slot, prompt_len, max_new, temp, rid, final, ctx):
+        """Run one prompt chunk for ``slot`` (scheduler-planned): install
+        the chunk's K/V through the slot's cache view and, on the final
+        chunk, arm the slot for decode with the last real token's logits.
+        ``ctx`` (static) truncates the visible cache to the live prefix —
+        the chunk attends to nothing at or above its own padded end."""
+        view, tables = self.backend.slot_view(cache_state, slot, ctx)
+        t = tokens.shape[1]
+        valid = (jnp.arange(t, dtype=jnp.int32) < length)[None, :]
+        logits, view = self.lm.prefill_chunk(
+            params, view, tokens, jnp.reshape(start, (1,)),
+            layout=self.backend.layout, block_tables=tables, valid=valid,
+            logits_index=jnp.reshape(length - 1, (1,)))
+        cache_state = self.backend.slot_update(cache_state, slot, view)
+        last = logits[0, 0]
+        state = dict(state)
+        state["last"] = state["last"].at[slot].set(
+            jnp.where(final, last.astype(jnp.float32), state["last"][slot]))
+        state["pos"] = state["pos"].at[slot].set(prompt_len)
+        state["steps"] = state["steps"].at[slot].set(0)
+        state["budget"] = state["budget"].at[slot].set(max_new)
+        state["temp"] = state["temp"].at[slot].set(temp)
+        state["rid"] = state["rid"].at[slot].set(rid)
+        state["active"] = state["active"].at[slot].set(final & (max_new > 0))
+        return cache_state, state
+
+    def _step_impl(self, params, cache_state, state, base_key):
+        """Fused decode step: sample → append → done-detect, on device.
+        Sampling keys fold (request_id, step) into ``base_key``, so a
+        request's stream is independent of its co-scheduled neighbors."""
         active = state["active"]
-        nxt = sample_logits_batch(rng, state["last"], state["temp"])
+        keys = request_keys(base_key, state["rid"], state["steps"])
+        nxt = sample_logits_keyed(keys, state["last"], state["temp"])
         rows = jnp.arange(self.batch_slots)
         idx = jnp.clip(state["steps"], 0, self.max_seq_len - 1)
         out = state["out"].at[rows, idx].set(
             jnp.where(active, nxt, state["out"][rows, idx]))
         steps = state["steps"] + active.astype(jnp.int32)
         feed = jnp.where(active, nxt, 0)[:, None]
+        # inactive rows (free slots, mid-prefill slots) must not write their
+        # junk token into the cache: valid-masked append drops them
         logits, caches = self.lm.decode_step(
             params, cache_state["caches"], feed, state["pos"],
             layout=self.backend.layout,
-            block_tables=cache_state["tables"])
+            block_tables=cache_state["tables"],
+            valid=active[:, None])
         finished = steps >= state["budget"]
         if self.eos_id is not None:
             finished |= nxt == self.eos_id
@@ -228,12 +377,68 @@ class ServingEngine:
             "steps": steps,
             "budget": state["budget"],
             "temp": state["temp"],
+            "rid": state["rid"],
             "active": active & ~finished,
             "out": out,
         }
         return {"caches": caches, "tables": cache_state["tables"]}, state
 
     # -- host-side management -------------------------------------------------
+    def _try_admit(self, slots, free, prefilling):
+        """Scheduler admission callback: grant the queue head a slot plus
+        its cache reservation, or return None. Chunked admissions return a
+        ``PrefillProgress`` (the scheduler plans their chunks); legacy
+        admissions run the monolithic prefill here and return MONOLITHIC."""
+        if not free or not self._queue:
+            return None
+        r = self._queue[0]
+        key = r.prompt if self._admit_with_tokens else len(r.prompt)
+        if not self.backend.can_admit(key, r.max_new_tokens):
+            return None
+        self._queue.pop(0)
+        slot = free.pop()
+        if not self.scheduler.chunked:
+            self._admit(r, slot, slots)
+            return MONOLITHIC
+        table_row = self.backend.alloc_slot(slot, key, r.max_new_tokens)
+        start = self.backend.shared_prefill_start(slot)
+        shared_blocks = self.backend.shared_block_count(slot)
+        for src, dst in self.backend.take_pending_copies():
+            self._cache_state = self._copy_fn(
+                self._cache_state, jnp.int32(src), jnp.int32(dst))
+        self._cache_state = self._begin_fn(
+            self._cache_state, jnp.int32(slot), jnp.asarray(table_row),
+            jnp.int32(shared_blocks))
+        r.admit_s = time.perf_counter()
+        self.prefill_tokens_total += len(r.prompt)
+        self.prefill_tokens_skipped += start
+        pp = PrefillProgress(request=r, slot=slot, next=start,
+                             total=len(r.prompt))
+        prefilling[slot] = pp
+        return pp
+
+    def _run_chunk(self, c, prefilling, slots):
+        pp = prefilling[c.slot]
+        r = pp.request
+        tokens = np.zeros((1, c.bucket), np.int32)
+        tokens[0, :c.length] = r.prompt[c.start:c.start + c.length]
+        # static context bound: next power of two covering the padded chunk
+        # end (bounded retrace set: |chunk buckets| x |context buckets|)
+        ctx = min(self.max_seq_len, _next_pow2(c.start + c.bucket))
+        self._cache_state, self._state = self._chunk_fn(
+            self.params, self._cache_state, self._state, jnp.asarray(tokens),
+            jnp.int32(c.start), jnp.int32(c.length), jnp.int32(c.slot),
+            jnp.int32(len(r.prompt)), jnp.int32(r.max_new_tokens),
+            jnp.float32(r.temperature), jnp.int32(r.request_id),
+            jnp.bool_(c.final), ctx)
+        pp.next = c.start + c.length
+        if c.final:
+            del prefilling[c.slot]
+            # the slot's full prompt blocks now hold real K/V: publish them
+            # for prefix sharing by later admissions
+            self.backend.register_prefix(c.slot, r.prompt)
+            slots[c.slot] = r
+
     def _admit(self, r: Request, slot: int, slots: Dict[int, Request]):
         length = len(r.prompt)
         bucket = bucket_for(length, self.buckets)
@@ -243,19 +448,26 @@ class ServingEngine:
         self._cache_state, self._state = self._admit_fn(
             self.params, self._cache_state, self._state, jnp.asarray(tokens),
             jnp.int32(length), jnp.int32(slot), jnp.int32(r.max_new_tokens),
-            jnp.float32(r.temperature), jnp.asarray(table_row))
+            jnp.float32(r.temperature), jnp.int32(r.request_id),
+            jnp.asarray(table_row))
         r.admit_s = time.perf_counter()
+        self.prefill_tokens_total += length
         slots[slot] = r
 
     def _decode_round(self, slots, free, done):
         if not slots:
             return
-        self._rng, k = jax.random.split(self._rng)
         self._cache_state, self._state = self._step_fn(
-            self.params, self._cache_state, self._state, k)
+            self.params, self._cache_state, self._state, self._base_key)
         self.decode_steps += 1
         self.occupied_slot_steps += len(slots)
         active = np.asarray(self._state["active"])       # the one host sync
+        now = time.perf_counter()
+        for r in slots.values():
+            # every budget>0 member sampled a token in the step above;
+            # budget-0 requests never produce one and get no TTFT
+            if r.ttft_s == 0.0 and r.max_new_tokens > 0:
+                r.ttft_s = now - r.submit_s
         for slot in [s for s, _ in slots.items() if not active[s]]:
             r = slots.pop(slot)
             n = int(self._state["steps"][slot])
@@ -299,8 +511,13 @@ class DrainBatchEngine:
         self._next_id = 0
         self.generated_tokens = 0
 
-        def prefill(params, batch):
-            return lm.prefill(params, batch, cache_width=max_seq_len)
+        windowed = _has_windowed_blocks(lm)
+
+        def prefill(params, batch, lengths):
+            # lengths matter only when a window-wide cache could keep pad
+            # rows of the batch's longest-prompt padding (see _admit_impl)
+            return lm.prefill(params, batch, cache_width=max_seq_len,
+                              lengths=lengths if windowed else None)
 
         self.prefill_fn = jax.jit(prefill)
         self.decode_fn = jax.jit(lm.decode_step)
@@ -328,6 +545,9 @@ class DrainBatchEngine:
 
     def _serve_batch(self, requests: List[Request]) -> None:
         b = self.batch_slots
+        admit = time.perf_counter()          # batch enters service together
+        for r in requests:
+            r.admit_s = admit
         plen = max(len(r.prompt) for r in requests)
         lens = np.array([len(r.prompt) for r in requests]
                         + [plen] * (b - len(requests)), np.int32)
@@ -335,7 +555,8 @@ class DrainBatchEngine:
         for i, r in enumerate(requests):
             tokens[i, :len(r.prompt)] = r.prompt         # right-pad (exact)
         logits, caches = self.prefill_fn(self.params,
-                                         {"tokens": jnp.asarray(tokens)})
+                                         {"tokens": jnp.asarray(tokens)},
+                                         jnp.asarray(lens))
         last = jnp.take_along_axis(
             logits, jnp.asarray(lens)[:, None, None] - 1, axis=1)[:, 0, :]
         max_new = max(r.max_new_tokens for r in requests)
@@ -347,6 +568,10 @@ class DrainBatchEngine:
             self.rng, k = jax.random.split(self.rng)
             nxt = sample_logits_batch(k, last, temp)
             outs[:, t] = np.asarray(nxt)[:b]             # per-token host trip
+            if t == 0:
+                first = time.perf_counter()
+                for r in requests:
+                    r.ttft_s = first - r.submit_s
             logits1, caches = self.decode_fn(self.params, caches,
                                              nxt[:, None], pos)
             pos = pos + 1

@@ -69,6 +69,19 @@ def _map_kv_dicts(fn, tree, other=None):
 # Layouts: the layer-level contract the attention code programs against
 # ---------------------------------------------------------------------------
 
+def _chunk_index(cur_pos, updates, valid, batch: int):
+    """Shared append bookkeeping: per-token positions (B, T) for a chunk
+    starting at ``cur_pos`` plus the write-validity mask (True = real token;
+    False = right-pad / inactive slot, must not land in the cache). ``valid``
+    is assumed to be a contiguous prefix per row (chunks are dense)."""
+    t = next(iter(updates.values())).shape[1]
+    start = _pos1d(cur_pos, batch)
+    pos = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    ok = (jnp.ones((batch, t), bool) if valid is None
+          else jnp.broadcast_to(jnp.asarray(valid, bool), (batch, t)))
+    return start, pos, ok
+
+
 @dataclasses.dataclass(frozen=True)
 class RingLayout:
     """Per-slot ring: cache arrays are (B, W, ...); token at position ``p``
@@ -76,14 +89,23 @@ class RingLayout:
     currently holds (−1 = empty)."""
 
     def append(self, cache: Dict[str, jnp.ndarray], updates, cur_pos,
-               block_tables=None) -> Dict[str, jnp.ndarray]:
+               block_tables=None, valid=None) -> Dict[str, jnp.ndarray]:
+        """Write a T-token chunk (T = 1 for decode) at positions
+        ``cur_pos + i``. Invalid tokens are routed to ring index ``width``
+        — out of bounds, so the scatter drops them (JAX's default scatter
+        mode) and the cache is untouched. When a chunk is longer than the
+        ring (windowed layers), only each ring slot's newest token is kept
+        (the older ones would be overwritten within this same scatter, and
+        scatter order with duplicate indices is undefined)."""
         b, width = cache["pos"].shape
-        cur = _pos1d(cur_pos, b)
-        slot = cur % width
-        rows = jnp.arange(b)
-        new = {k: cache[k].at[rows, slot].set(u[:, 0])
+        start, pos, ok = _chunk_index(cur_pos, updates, valid, b)
+        length = jnp.sum(ok.astype(jnp.int32), axis=1, keepdims=True)
+        keep = ok & (pos + width > start[:, None] + length - 1)
+        slot = jnp.where(keep, pos % width, width)       # width = dropped
+        rows = jnp.arange(b)[:, None]
+        new = {k: cache[k].at[rows, slot].set(u)
                for k, u in updates.items()}
-        new["pos"] = cache["pos"].at[rows, slot].set(cur)
+        new["pos"] = cache["pos"].at[rows, slot].set(pos)
         return new
 
     def attend(self, q, cache, q_pos, block_tables=None, *,
@@ -108,20 +130,23 @@ class PagedLayout:
     block_size: int
 
     def append(self, cache: Dict[str, jnp.ndarray], updates, cur_pos,
-               block_tables=None) -> Dict[str, jnp.ndarray]:
+               block_tables=None, valid=None) -> Dict[str, jnp.ndarray]:
+        """Write a T-token chunk (T = 1 for decode) at positions
+        ``cur_pos + i``. Free / never-admitted slots have no blocks and
+        invalid (pad / inactive) tokens must not write: both are parked in
+        the trash block (0) with pos −1."""
         assert block_tables is not None, "paged layout needs block tables"
         b, m = block_tables.shape
-        cur = _pos1d(cur_pos, b)
-        logical = jnp.clip(cur // self.block_size, 0, m - 1)
-        row = block_tables[jnp.arange(b), logical]
-        # free / never-admitted slots have no blocks: park their writes in
-        # the trash block (0) and keep its positions masked
-        phys = jnp.where(row >= 0, row, 0)
-        off = cur % self.block_size
-        new = {k: cache[k].at[phys, off].set(u[:, 0])
+        _, pos, ok = _chunk_index(cur_pos, updates, valid, b)
+        logical = jnp.clip(pos // self.block_size, 0, m - 1)
+        row = jnp.take_along_axis(block_tables, logical, axis=1)   # (B, T)
+        ok = ok & (row >= 0)
+        phys = jnp.where(ok, row, 0)
+        off = jnp.where(ok, pos % self.block_size, 0)
+        new = {k: cache[k].at[phys, off].set(u)
                for k, u in updates.items()}
         new["pos"] = cache["pos"].at[phys, off].set(
-            jnp.where(row >= 0, cur, -1))
+            jnp.where(ok, pos, -1))
         return new
 
     def attend(self, q, cache, q_pos, block_tables=None, *,
@@ -164,6 +189,14 @@ class KVCacheBackend:
     may refuse), then passes the returned table row into ``prefill_fill``
     *inside* the jitted admit program. ``free_slot`` returns the blocks at
     completion. ``hbm_bytes`` is the device-resident KV footprint.
+
+    Chunked prefill adds a second admission shape: ``begin_slot`` (wipe the
+    slot's stale positions and install its table row, once per admission)
+    followed by any number of ``slot_view`` → model chunk → ``slot_update``
+    round-trips, each traced inside the engine's per-chunk program.
+    ``alloc_slot`` may be given the prompt *tokens* instead of a length;
+    backends that share prefix cache (``PagedCache``) then report via
+    ``shared_prefill_start`` how many leading tokens are already installed.
     """
 
     layout: Any
@@ -171,13 +204,15 @@ class KVCacheBackend:
     def init(self) -> Dict[str, Any]:
         raise NotImplementedError
 
-    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+    def can_admit(self, prompt, max_new: int) -> bool:
+        """``prompt``: length (int) or the token array itself (enables
+        prefix-aware accounting in sharing backends)."""
         raise NotImplementedError
 
-    def alloc_slot(self, slot: int, prompt_len: int,
-                   max_new: int) -> np.ndarray:
+    def alloc_slot(self, slot: int, prompt, max_new: int) -> np.ndarray:
         """Host-side reservation; returns the slot's block-table row (a
-        dummy for backends without tables). Must only be called after
+        dummy for backends without tables). ``prompt`` is a length or the
+        token array (see ``can_admit``). Must only be called after
         ``can_admit`` said yes."""
         raise NotImplementedError
 
@@ -188,6 +223,49 @@ class KVCacheBackend:
 
     def free_slot(self, cache_state, slot: int) -> Dict[str, Any]:
         raise NotImplementedError
+
+    # -- chunked-prefill admission seam --------------------------------------
+    def begin_slot(self, cache_state, slot, table_row, shared_blocks):
+        """Prepare ``slot`` for incremental (chunked) install: wipe stale
+        per-token positions so the previous tenant can't alias into the new
+        request's causal mask, and install the table row. ``shared_blocks``
+        leading blocks hold live shared-prefix content and are left alone.
+        Traced (jit-safe in ``slot``/``table_row``/``shared_blocks``)."""
+        raise NotImplementedError
+
+    def slot_view(self, cache_state, slot, ctx=None):
+        """(caches_view, tables_view) for running a single-slot model chunk:
+        the ring slices the slot's cache line (batch 1); the paged pool is
+        global, so the view is the pool plus the slot's (1, M) table row.
+        ``ctx`` (static) bounds the visible context to the first ``ctx``
+        positions — the chunk only ever attends to positions below its own
+        end, so slicing skips the dense attend over the empty cache tail
+        (the host-path analog of the TPU kernels' masked-block skip)."""
+        raise NotImplementedError
+
+    def slot_update(self, cache_state, slot, view_caches):
+        """Write a ``slot_view`` caches pytree back (no-op for the paged
+        pool, whose view aliases the global state)."""
+        raise NotImplementedError
+
+    def shared_prefill_start(self, slot: int) -> int:
+        """First prompt position the engine must actually compute for
+        ``slot`` (> 0 when a shared prefix is already installed)."""
+        return 0
+
+    def shared_block_count(self, slot: int) -> int:
+        """Leading table entries of ``slot`` whose content is already live
+        (shared or copied) — ``begin_slot`` must not wipe them."""
+        return 0
+
+    def register_prefix(self, slot: int, prompt) -> None:
+        """Called by the engine when ``slot``'s prefill completes: the
+        slot's full prompt blocks now hold real K/V and may be shared."""
+
+    def take_pending_copies(self) -> List:
+        """Drain (src, dst) physical block copies the allocator scheduled
+        (copy-on-write); the engine replays them on device."""
+        return []
 
     def hbm_bytes(self) -> int:
         raise NotImplementedError
@@ -206,6 +284,15 @@ def _cache_proto(lm, params, max_seq_len: int, proto_len: int):
 
 def _path_endswith(path, name: str) -> bool:
     return len(path) > 0 and getattr(path[-1], "key", None) == name
+
+
+def _prompt_spec(prompt):
+    """Normalize the ``prompt`` admission argument: length (int) or token
+    array -> (length, tokens_or_None)."""
+    if isinstance(prompt, (int, np.integer)):
+        return int(prompt), None
+    tokens = np.asarray(prompt, np.int32)
+    return int(tokens.shape[0]), tokens
 
 
 class RingCache(KVCacheBackend):
@@ -231,10 +318,10 @@ class RingCache(KVCacheBackend):
         caches = jax.tree_util.tree_map_with_path(leaf, self._proto)
         return {"caches": caches, "tables": None}
 
-    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+    def can_admit(self, prompt, max_new: int) -> bool:
         return True                       # a granted slot is the only gate
 
-    def alloc_slot(self, slot, prompt_len, max_new) -> np.ndarray:
+    def alloc_slot(self, slot, prompt, max_new) -> np.ndarray:
         return np.zeros((1,), np.int32)   # no tables: fixed dummy row
 
     def prefill_fill(self, cache_state, one_caches, slot, length, table_row):
@@ -246,6 +333,44 @@ class RingCache(KVCacheBackend):
 
     def free_slot(self, cache_state, slot):
         return cache_state                # rings are reused in place
+
+    # -- chunked-prefill admission seam --------------------------------------
+    def begin_slot(self, cache_state, slot, table_row, shared_blocks):
+        """Wipe the slot's per-token positions: unlike monolithic admission
+        (which overwrites the whole cache line), chunked install only writes
+        the chunk's positions, so the previous tenant's stale entries would
+        otherwise sit inside the new request's causal mask."""
+
+        def wipe(path, g):
+            if _path_endswith(path, "pos"):
+                return g.at[:, slot].set(-1)
+            return g
+
+        caches = jax.tree_util.tree_map_with_path(wipe,
+                                                  cache_state["caches"])
+        return {"caches": caches, "tables": cache_state["tables"]}
+
+    def slot_view(self, cache_state, slot, ctx=None):
+        """Chunked prefill requires unwindowed layers (engine-validated),
+        so every cache line is ``max_seq_len`` wide and position ``p``
+        lives at ring index ``p`` — the first ``ctx`` columns are exactly
+        the positions below ``ctx``, making the prefix slice exact."""
+
+        def view(g):
+            width = g.shape[2] if ctx is None else min(ctx, g.shape[2])
+            starts = (0, slot) + (0,) * (g.ndim - 2)
+            return jax.lax.dynamic_slice(
+                g, starts, (g.shape[0], 1, width) + g.shape[3:])
+
+        return jax.tree.map(view, cache_state["caches"]), None
+
+    def slot_update(self, cache_state, slot, view_caches):
+        def upd(g, c):
+            starts = (0, slot) + (0,) * (g.ndim - 2)
+            return jax.lax.dynamic_update_slice(g, c, starts)
+
+        caches = jax.tree.map(upd, cache_state["caches"], view_caches)
+        return {"caches": caches, "tables": cache_state["tables"]}
 
     def hbm_bytes(self) -> int:
         total = 0
@@ -262,11 +387,24 @@ class PagedCache(KVCacheBackend):
     """Block-table backend: a global pool of ``num_blocks`` blocks of
     ``block_size`` tokens per layer, allocated per request at admission and
     returned at completion. Slot count is bounded by live tokens in the
-    pool, not by ``batch_slots × max_seq_len``."""
+    pool, not by ``batch_slots × max_seq_len``.
+
+    Blocks are **refcounted**: requests whose prompts share a full-block
+    prefix point their leading table entries at the same physical blocks
+    (``prefix_sharing``), skipping both the HBM and the prefill compute for
+    those tokens. A prefix-hash index maps ``tokens[:k*bs]`` (full blocks
+    only, registered once the owning request's prefill completes) to the
+    pool block holding block ``k-1``. ``free_slot`` decrements; a block
+    returns to the free list — and drops out of the index — at refcount 0.
+    If a new request must *write* inside a shared block (its prompt is
+    entirely covered by shared blocks, so the engine recomputes the final
+    prompt token for its logits), the allocator schedules a copy-on-write:
+    a fresh block replaces the shared one in this slot's table and the
+    engine replays the device-side copy before the first chunk."""
 
     def __init__(self, lm, params, *, batch_slots: int, max_seq_len: int,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 proto_len: int = 16):
+                 proto_len: int = 16, prefix_sharing: bool = True):
         for stage in lm.cfg.stages:
             for bdef in stage.blocks:
                 if bdef.mixer not in ("attn", "mla"):
@@ -277,6 +415,7 @@ class PagedCache(KVCacheBackend):
         self.batch_slots = batch_slots
         self.max_seq_len = max_seq_len
         self.block_size = block_size
+        self.prefix_sharing = prefix_sharing
         self.blocks_per_slot = -(-max_seq_len // block_size)   # table width M
         if num_blocks is None:
             # default to ring-equivalent capacity (+ the trash block)
@@ -287,10 +426,17 @@ class PagedCache(KVCacheBackend):
         self._proto = _cache_proto(lm, params, max_seq_len, proto_len)
         self._free: List[int] = list(range(1, num_blocks))     # 0 = trash
         self._slot_blocks: Dict[int, List[int]] = {}
+        self._ref: Dict[int, int] = {}                # block -> refcount
+        self._index: Dict[bytes, int] = {}            # prefix hash -> block
+        self._block_key: Dict[int, bytes] = {}        # reverse index
+        self._slot_shared: Dict[int, int] = {}        # slot -> live blocks
+        self._slot_start: Dict[int, int] = {}         # slot -> prefill start
+        self._pending_copies: List = []               # (src, dst) for COW
         # accounting for the bench / capacity planning
         self.admitted = 0
         self.blocks_allocated_total = 0
         self.peak_blocks_in_use = 0
+        self.cow_copies = 0
 
     # -- device state --------------------------------------------------------
     def init(self) -> Dict[str, Any]:
@@ -318,25 +464,117 @@ class PagedCache(KVCacheBackend):
     def blocks_needed(self, prompt_len: int, max_new: int) -> int:
         return max(1, -(-(prompt_len + max_new) // self.block_size))
 
-    def can_admit(self, prompt_len: int, max_new: int) -> bool:
-        return self.blocks_needed(prompt_len, max_new) <= len(self._free)
+    def _plan(self, prompt, max_new: int):
+        """(total_blocks, shared_blocks, fresh_needed, prefill_start) for a
+        prospective admission. Sharing matches the longest chain of full
+        prompt blocks already registered in the prefix index; the engine
+        always recomputes at least the final prompt token (its logits seed
+        decode), and when that token's block is shared the plan reserves one
+        extra block for the copy-on-write."""
+        length, tokens = _prompt_spec(prompt)
+        total = self.blocks_needed(length, max_new)
+        shared = []
+        if self.prefix_sharing and tokens is not None:
+            bs = self.block_size
+            while (len(shared) + 1) * bs <= length:
+                blk = self._index.get(tokens[:(len(shared) + 1) * bs]
+                                      .tobytes())
+                if blk is None:
+                    break
+                shared.append(blk)
+        k = len(shared)
+        prefill_start = k * self.block_size
+        cow = 0
+        if prefill_start >= length:            # fully covered, block-aligned
+            prefill_start = length - 1
+            cow = 1                            # last block must go private
+        return total, shared, total - k + cow, prefill_start
 
-    def alloc_slot(self, slot, prompt_len, max_new) -> np.ndarray:
-        need = self.blocks_needed(prompt_len, max_new)
-        if need > len(self._free):
-            raise RuntimeError(f"paged pool exhausted: need {need} blocks, "
-                               f"{len(self._free)} free")
+    def can_admit(self, prompt, max_new: int) -> bool:
+        _, _, fresh, _ = self._plan(prompt, max_new)
+        return fresh <= len(self._free)
+
+    def alloc_slot(self, slot, prompt, max_new) -> np.ndarray:
+        length, _ = _prompt_spec(prompt)
+        total, shared, fresh_need, prefill_start = self._plan(prompt, max_new)
+        if fresh_need > len(self._free):
+            raise RuntimeError(
+                f"paged pool exhausted: need {fresh_need} blocks, "
+                f"{len(self._free)} free")
         if slot in self._slot_blocks:
             raise RuntimeError(f"slot {slot} already holds blocks")
-        blocks, self._free = self._free[:need], self._free[need:]
+        fresh, self._free = (self._free[:fresh_need],
+                             self._free[fresh_need:])
+        for blk in shared:
+            self._ref[blk] = self._ref.get(blk, 0) + 1
+        for blk in fresh:
+            self._ref[blk] = 1
+        blocks = list(shared)
+        if prefill_start < len(shared) * self.block_size:
+            # copy-on-write: the final prompt token lives in the last shared
+            # block; hand this slot a private copy instead
+            src = blocks[-1]
+            dst = fresh[0]
+            blocks[-1] = dst
+            self._ref[src] -= 1                # undo the share of that block
+            self._pending_copies.append((src, dst))
+            self.cow_copies += 1
+            blocks.extend(fresh[1:])
+        else:
+            blocks.extend(fresh)
         self._slot_blocks[slot] = blocks
+        self._slot_shared[slot] = len(shared)   # content-live leading blocks
+        self._slot_start[slot] = prefill_start
         row = np.full((self.blocks_per_slot,), -1, np.int32)
-        row[:need] = blocks
+        row[:total] = blocks
         self.admitted += 1
-        self.blocks_allocated_total += need
+        self.blocks_allocated_total += fresh_need
         self.peak_blocks_in_use = max(self.peak_blocks_in_use,
                                       self.blocks_in_use)
         return row
+
+    def shared_prefill_start(self, slot: int) -> int:
+        return self._slot_start.get(slot, 0)
+
+    def shared_block_count(self, slot: int) -> int:
+        return self._slot_shared.get(slot, 0)
+
+    def register_prefix(self, slot: int, prompt) -> None:
+        """Publish the slot's full prompt blocks into the prefix index.
+        Called when the slot's prefill *completes* — earlier registration
+        would let a concurrent admission share blocks whose K/V hasn't been
+        installed yet (pos −1, silently masked: wrong outputs)."""
+        if not self.prefix_sharing:
+            return
+        length, tokens = _prompt_spec(prompt)
+        if tokens is None:
+            return
+        blocks = self._slot_blocks.get(slot)
+        if blocks is None:
+            return
+        bs = self.block_size
+        for i in range(length // bs):
+            key = tokens[:(i + 1) * bs].tobytes()
+            blk = blocks[i]
+            if key in self._index or blk in self._block_key:
+                continue
+            self._index[key] = blk
+            self._block_key[blk] = key
+
+    def take_pending_copies(self) -> List:
+        copies, self._pending_copies = self._pending_copies, []
+        return copies
+
+    def copy_block(self, cache_state, src, dst):
+        """Device-side block copy (COW): every layer's pool rows ``src`` →
+        ``dst``, per-token positions included. Traced (jit-safe)."""
+
+        def copy(c):
+            return {key: leaf.at[:, dst].set(leaf[:, src])
+                    for key, leaf in c.items()}
+
+        caches = _map_kv_dicts(copy, cache_state["caches"])
+        return {"caches": caches, "tables": cache_state["tables"]}
 
     @property
     def blocks_in_use(self) -> int:
@@ -348,14 +586,59 @@ class PagedCache(KVCacheBackend):
         self.admitted = 0
         self.blocks_allocated_total = 0
         self.peak_blocks_in_use = self.blocks_in_use
+        self.cow_copies = 0
 
     def free_slot(self, cache_state, slot):
         blocks = self._slot_blocks.pop(slot, None)
         if blocks is None:
             return cache_state
-        self._free.extend(blocks)
+        self._slot_shared.pop(slot, None)
+        self._slot_start.pop(slot, None)
+        for blk in blocks:
+            self._ref[blk] = self._ref.get(blk, 1) - 1
+            if self._ref[blk] > 0:
+                continue                      # still shared by another slot
+            del self._ref[blk]
+            key = self._block_key.pop(blk, None)
+            if key is not None and self._index.get(key) == blk:
+                del self._index[key]
+            self._free.append(blk)
         tables = cache_state["tables"].at[slot].set(-1)
         return {"caches": cache_state["caches"], "tables": tables}
+
+    # -- chunked-prefill admission seam --------------------------------------
+    def begin_slot(self, cache_state, slot, table_row, shared_blocks):
+        """Wipe per-token positions of the row's *fresh* blocks (they may be
+        reused from a finished tenant whose stale positions would alias into
+        the new request's causal mask) and install the table row. The
+        ``shared_blocks`` leading entries hold live shared-prefix (or COW
+        copy) content and must be left intact."""
+        n = self.num_blocks
+        idx = jnp.arange(self.blocks_per_slot)
+        wipe = (idx >= shared_blocks) & (table_row >= 0)
+        phys = jnp.where(wipe, table_row, n)          # n = OOB -> dropped
+
+        def clear(c):
+            return {key: (leaf.at[:, phys].set(-1) if key == "pos" else leaf)
+                    for key, leaf in c.items()}
+
+        caches = _map_kv_dicts(clear, cache_state["caches"])
+        tables = cache_state["tables"].at[slot].set(table_row)
+        return {"caches": caches, "tables": tables}
+
+    def slot_view(self, cache_state, slot, ctx=None):
+        tables = jax.lax.dynamic_slice_in_dim(cache_state["tables"], slot, 1,
+                                              axis=0)
+        if ctx is not None:
+            # visible context = the leading table entries covering positions
+            # below ctx; later entries hold no position the chunk may see
+            m = min(-(-ctx // self.block_size), self.blocks_per_slot)
+            tables = tables[:, :m]
+        return cache_state["caches"], tables
+
+    def slot_update(self, cache_state, slot, view_caches):
+        # the view *is* the global pool: chunk writes already landed there
+        return {"caches": view_caches, "tables": cache_state["tables"]}
 
     # -- admission-time install ---------------------------------------------
     def prefill_fill(self, cache_state, one_caches, slot, length, table_row):
@@ -418,7 +701,8 @@ class PagedCache(KVCacheBackend):
 
 def make_backend(kind, lm, params, *, batch_slots: int, max_seq_len: int,
                  proto_len: int = 16, block_size: int = 16,
-                 num_blocks: Optional[int] = None) -> KVCacheBackend:
+                 num_blocks: Optional[int] = None,
+                 prefix_sharing: bool = True) -> KVCacheBackend:
     if isinstance(kind, KVCacheBackend):
         return kind
     if kind == "ring":
@@ -427,6 +711,7 @@ def make_backend(kind, lm, params, *, batch_slots: int, max_seq_len: int,
     if kind == "paged":
         return PagedCache(lm, params, batch_slots=batch_slots,
                           max_seq_len=max_seq_len, proto_len=proto_len,
-                          block_size=block_size, num_blocks=num_blocks)
+                          block_size=block_size, num_blocks=num_blocks,
+                          prefix_sharing=prefix_sharing)
     raise ValueError(f"unknown cache backend {kind!r} "
                      "(expected 'ring' or 'paged')")

@@ -17,6 +17,35 @@ def sample_logits(rng, logits, *, temperature: float = 0.0,
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
 
 
+def request_keys(base, request_ids, steps) -> jnp.ndarray:
+    """Per-row PRNG keys derived from (request_id, step): sampling becomes a
+    pure function of the request and its decode depth, so temperature > 0
+    outputs no longer depend on which requests happen to be co-scheduled in
+    the batch (or on how a scheduler interleaved their admission).
+
+    base: a PRNGKey; request_ids, steps: (B,) int32. Returns (B, ...) keys.
+    """
+    def one(rid, step):
+        return jax.random.fold_in(jax.random.fold_in(base, rid), step)
+
+    return jax.vmap(one)(jnp.asarray(request_ids, jnp.uint32),
+                         jnp.asarray(steps, jnp.uint32))
+
+
+def sample_logits_keyed(keys, logits, temperature, *,
+                        top_k: int = 0) -> jnp.ndarray:
+    """Like ``sample_logits_batch`` but with an explicit per-row key
+    (see ``request_keys``). logits: (B, V); temperature: (B,)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32)
+    if top_k and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
+
+
 def sample_logits_batch(rng, logits, temperature, *,
                         top_k: int = 0) -> jnp.ndarray:
     """Vectorized sampling with per-row temperature (continuous batching

@@ -1,0 +1,188 @@
+"""Token-budget step scheduler: the serving-engine policy layer.
+
+Each engine step used to be "admit every queued prompt that fits (one
+monolithic prefill each), then run one decode round" — a burst of long
+prompts stalls every in-flight decode for the whole burst's prefill time,
+exactly the tail-latency behavior ACE's performance-optimization layer is
+meant to remove. The ``Scheduler`` pulls that policy out of
+``ServingEngine.run()`` and composes each step as a *mixed batch* under a
+configurable token budget:
+
+- one decode token for every active slot (decode always proceeds), plus
+- one or more *prompt chunks* for admitting requests, consuming whatever
+  budget the decodes left.
+
+Chunks are bucketed to a small power-of-two shape set (bounding retraces),
+and in-flight prefills are continued FIFO before new admissions so a
+request's time-to-first-token is never starved by later arrivals. With
+``chunk_tokens=None`` the scheduler degenerates to the legacy policy
+(whole-bucket admission), which stays the default; engines *execute*
+scheduler decisions either way — they no longer decide anything.
+
+Chunking is output-exact: a chunk attends to previously installed chunks
+through the cache layout with ordinary position masking, so the logits at
+the final prompt token — the only ones sampling ever reads — are identical
+to the monolithic prefill's (``tests/test_scheduler.py`` pins this
+token-for-token against the unchunked engine, shared prefixes and
+copy-on-write divergence included).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+# sentinel returned by an engine's try_admit for legacy whole-prompt
+# admissions (nothing to chunk; the engine already ran the prefill)
+MONOLITHIC = object()
+
+
+def prompt_buckets(max_seq_len: int, min_bucket: int = 16) -> List[int]:
+    """Power-of-two prefill shapes: [min_bucket, ..., max_seq_len]."""
+    buckets = []
+    b = min_bucket
+    while b < max_seq_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_seq_len)
+    return buckets
+
+
+def bucket_for(n: int, buckets: List[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(
+        f"prompt length {n} exceeds the largest prefill bucket "
+        f"{buckets[-1]} (= max_seq_len); engines validate this at submit() "
+        f"— either raise max_seq_len or submit with truncation enabled")
+
+
+@dataclasses.dataclass
+class PrefillProgress:
+    """A request mid-prefill: ``next`` is the first prompt position not yet
+    computed (> 0 at admission when a shared prefix was already installed)."""
+    request: Any
+    slot: int
+    next: int
+    total: int
+
+    @property
+    def done(self) -> bool:
+        return self.next >= self.total
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkTask:
+    """One prompt chunk to run this step: ``length`` real tokens starting at
+    prompt position ``start``, padded to ``bucket`` (a compile shape), for
+    the request prefilling in ``slot``. ``final`` marks the chunk that
+    completes the prompt (its last-token logits seed decode)."""
+    slot: int
+    start: int
+    length: int
+    bucket: int
+    final: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    """Chunks to execute this step plus admission count. Whether a decode
+    round follows is the *engine's* call at execution time: a final chunk
+    in this very plan can activate a slot, so any decode flag computed at
+    plan time would already be stale."""
+    chunks: Tuple[ChunkTask, ...]
+    admitted: int         # requests granted a slot this step
+
+
+def chunk_buckets(chunk_tokens: int, min_bucket: int = 8) -> List[int]:
+    """Power-of-two chunk shapes: [min_bucket, ..., chunk_tokens]."""
+    return prompt_buckets(chunk_tokens, min(min_bucket, chunk_tokens))
+
+
+class Scheduler:
+    """Per-step admission + chunk policy under a token budget.
+
+    ``token_budget`` is the target tokens *computed* per engine step:
+    active-slot decodes count 1 each, prompt chunks their real length.
+    Defaults to ``batch_slots + chunk_tokens`` (decodes never crowd out
+    prefill entirely, and vice versa). Must exceed ``batch_slots`` so a
+    fully decoding engine still advances the head prefill every step.
+    """
+
+    def __init__(self, *, batch_slots: int, chunk_tokens: Optional[int] = None,
+                 token_budget: Optional[int] = None, min_bucket: int = 8):
+        self.batch_slots = batch_slots
+        self.chunk_tokens = chunk_tokens
+        if chunk_tokens is None:
+            self.token_budget = None
+            self.buckets: List[int] = []
+            return
+        if chunk_tokens < 1:
+            raise ValueError(f"chunk_tokens must be >= 1 (got {chunk_tokens})")
+        if token_budget is None:
+            token_budget = batch_slots + chunk_tokens
+        if token_budget <= batch_slots:
+            raise ValueError(
+                f"token_budget ({token_budget}) must exceed batch_slots "
+                f"({batch_slots}): a saturated decode batch would starve "
+                f"prefill forever")
+        self.token_budget = token_budget
+        self.buckets = chunk_buckets(chunk_tokens, min_bucket)
+
+    @property
+    def chunked(self) -> bool:
+        return self.chunk_tokens is not None
+
+    # -- the per-step decision ------------------------------------------------
+    def plan_step(self, *, n_active: int, prefilling,
+                  try_admit: Callable[[], Any]) -> StepPlan:
+        """Compose one step. ``prefilling`` maps slot -> PrefillProgress in
+        admission order; ``try_admit`` is the engine's admission effect: it
+        grants the queue head a slot (plus cache reservation) and returns
+        its PrefillProgress, MONOLITHIC for legacy admissions, or None when
+        nothing further can be admitted. The engine executes the returned
+        chunks in order, then decodes whatever is active."""
+        admitted = 0
+        if not self.chunked:
+            while try_admit() is not None:
+                admitted += 1
+            return StepPlan((), admitted)
+
+        budget = self.token_budget
+        spent = n_active                     # decode tokens this step
+        chunks: List[ChunkTask] = []
+
+        def plan_for(pp: PrefillProgress, spent: int) -> int:
+            at = pp.next
+            while at < pp.total and spent < budget:
+                room = budget - spent
+                t = min(self.chunk_tokens, pp.total - at)
+                if t > room and chunks:
+                    # no runt chunks: a truncated chunk costs a full device
+                    # dispatch for a sliver of tokens — leave the budget's
+                    # tail unspent and let the next step issue a full chunk
+                    # (the first chunk of a step always proceeds, so an
+                    # over-budget decode load can't starve prefill)
+                    break
+                chunks.append(ChunkTask(
+                    slot=pp.slot, start=at, length=t,
+                    bucket=bucket_for(t, self.buckets),
+                    final=at + t >= pp.total))
+                at += t
+                spent += t
+            return spent
+
+        # continue in-flight prefills first (FIFO: earlier admissions
+        # reach their first token before later ones get budget)
+        for pp in list(prefilling.values()):
+            spent = plan_for(pp, spent)
+        # admit new requests into the remaining budget
+        while spent < budget:
+            pp = try_admit()
+            if pp is None:
+                break
+            admitted += 1
+            if pp is MONOLITHIC:
+                continue
+            spent = plan_for(pp, spent)
+        return StepPlan(tuple(chunks), admitted)

@@ -64,6 +64,58 @@ def test_mixed_positions_per_slot():
     assert float(jnp.max(jnp.abs(out - expect))) < 1e-4
 
 
+CHUNK_CASES = [
+    # (b, w, h, kv, hd, window, filled, chunk)
+    (2, 64, 4, 2, 32, None, 40, 8),       # GQA chunk mid-prefill
+    (1, 64, 4, 4, 32, None, 5, 5),        # chunk = whole written prefix
+    (2, 64, 8, 2, 64, 16, 48, 8),         # sliding window + GQA g=4
+    (1, 96, 3, 1, 32, None, 70, 16),      # MQA, bigger chunk
+]
+
+
+@pytest.mark.parametrize("case", CHUNK_CASES, ids=[str(c) for c in CHUNK_CASES])
+def test_chunk_queries_match_oracle(case):
+    """Chunked prefill: a T-token query block whose own K/V are already in
+    the cache (append-then-attend) against the streamed kernel."""
+    b, w, h, kv, hd, window, filled, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, chunk, h, hd))
+    k, v, k_pos, _ = _ring_cache(ks[1:], b, w, kv, hd, filled, filled)
+    q_pos = jnp.full((b,), filled - chunk, jnp.int32)  # chunk start
+    out = decode_attention(q, k, v, q_pos, k_pos, window=window,
+                           block_k=32, interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, q_pos, k_pos, window=window)
+    assert out.shape == q.shape
+    assert float(jnp.max(jnp.abs(out - expect))) < 1e-4
+
+
+def test_chunk_oracle_matches_full_flash_attention():
+    """The chunk oracle's causal masking equals dense full attention over
+    the same contiguous context (positions are the only mask input)."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    b, s, t, h, kv, hd = 2, 24, 7, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    full = ref.flash_attention_ref(q, k, v)
+    k_pos = jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32)
+    chunk = ref.decode_attention_ref(q[:, s - t:], k, v,
+                                     jnp.full((b,), s - t, jnp.int32), k_pos)
+    assert float(jnp.max(jnp.abs(full[:, s - t:] - chunk))) < 1e-5
+
+
+def test_explicit_per_token_query_positions():
+    """(B, T) q_pos is honored as-is (not derived from a start scalar)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    b, w, h, kv, hd, t = 2, 64, 4, 2, 32, 4
+    q = jax.random.normal(ks[0], (b, t, h, hd))
+    k, v, k_pos, _ = _ring_cache(ks[1:], b, w, kv, hd, 50, 50)
+    q_pos = jnp.asarray([[10, 11, 12, 13], [40, 41, 42, 43]], jnp.int32)
+    out = decode_attention(q, k, v, q_pos, k_pos, block_k=32, interpret=True)
+    expect = ref.decode_attention_ref(q, k, v, q_pos, k_pos)
+    assert float(jnp.max(jnp.abs(out - expect))) < 1e-4
+
+
 def test_model_dispatch_agrees_with_jnp_path():
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
     b, w, h, kv, hd = 2, 64, 4, 2, 32

@@ -109,6 +109,88 @@ def test_hbm_accounting():
     assert paged.hbm_bytes_per_slot() == paged.block_bytes() * 2.5
 
 
+def test_prefix_sharing_refcounts_and_index():
+    """Full-block prefix sharing at the allocator level: registration,
+    matched shares incrementing refcounts, and refcount-0 reclamation
+    dropping index entries."""
+    lm, params = _lm(_tiny_cfg())
+    be = PagedCache(lm, params, batch_slots=4, max_seq_len=64, block_size=8)
+    state = be.init()
+    prompt = np.arange(20, dtype=np.int32)             # 2 full blocks + 4
+    row0 = be.alloc_slot(0, prompt, 8)
+    assert be.shared_prefill_start(0) == 0             # nothing published yet
+    be.register_prefix(0, prompt)
+    assert len(be._index) == 2                         # tokens[:8], [:16]
+
+    # same 16-token prefix, different tail: shares 2 blocks, fresh rest
+    other = np.concatenate([prompt[:16], np.arange(100, 107,
+                                                   dtype=np.int32)])
+    free_before = len(be._free)
+    row1 = be.alloc_slot(1, other.astype(np.int32), 8)
+    assert list(row1[:2]) == list(row0[:2])            # physical sharing
+    assert be.shared_prefill_start(1) == 16
+    assert be.shared_block_count(1) == 2
+    assert be._ref[int(row0[0])] == 2
+    assert be.take_pending_copies() == []              # tail diverges: no COW
+    # only the non-shared blocks were newly reserved
+    assert free_before - len(be._free) == be.blocks_needed(len(other), 8) - 2
+
+    # owner leaves first: shared blocks stay live for slot 1
+    state = be.free_slot(state, 0)
+    assert be._ref[int(row0[0])] == 1
+    assert len(be._index) == 2
+    state = be.free_slot(state, 1)
+    assert be._ref == {} and be._index == {} and be._block_key == {}
+    assert sorted(be._free) == list(range(1, be.num_blocks))
+
+
+def test_block_aligned_full_cover_schedules_cow():
+    """A prompt entirely covered by shared blocks must still recompute its
+    final token; the allocator hands the slot a private copy of the last
+    shared block (copy-on-write) instead of letting it write shared state."""
+    lm, params = _lm(_tiny_cfg())
+    be = PagedCache(lm, params, batch_slots=2, max_seq_len=64, block_size=8)
+    prompt = np.arange(16, dtype=np.int32)             # exactly 2 blocks
+    row0 = be.alloc_slot(0, prompt, 8)
+    be.register_prefix(0, prompt)
+    row1 = be.alloc_slot(1, prompt.copy(), 4)
+    assert be.shared_prefill_start(1) == 15            # recompute last token
+    assert row1[0] == row0[0]                          # block 0 shared
+    assert row1[1] != row0[1]                          # block 1 went private
+    copies = be.take_pending_copies()
+    assert copies == [(int(row0[1]), int(row1[1]))]
+    assert be.cow_copies == 1
+    assert be._ref[int(row0[1])] == 1                  # share was undone
+
+
+def test_paged_accounting_invariant_after_run():
+    """After any ``run()`` — chunked, shared, starved — every non-reserved
+    block is back in the free list, refcounts and the prefix index are
+    empty, and no slot holds blocks."""
+    lm, params = _lm(_tiny_cfg())
+    rng = np.random.default_rng(11)
+    template = rng.integers(0, 60, size=8).astype(np.int32)
+    trace = [(np.concatenate([template,
+                              rng.integers(0, 60, size=int(rng.integers(
+                                  1, 10))).astype(np.int32)]),
+              int(rng.integers(2, 7))) for _ in range(6)]
+    for kw in ({}, {"chunk_tokens": 4}, {"chunk_tokens": 4,
+                                         "num_pool_blocks": 13}):
+        eng = ServingEngine(lm, params, batch_slots=3, max_seq_len=32,
+                            min_bucket=4, cache_backend="paged",
+                            block_size=8, **kw)
+        for prompt, max_new in trace:
+            eng.submit(prompt, max_new_tokens=max_new)
+        eng.run()
+        be = eng.backend
+        assert be.blocks_in_use == 0, kw
+        assert be._slot_blocks == {}, kw
+        assert be._ref == {}, kw
+        assert be._index == {} and be._block_key == {}, kw
+        assert sorted(be._free) == list(range(1, be.num_blocks)), kw
+        assert be.take_pending_copies() == [], kw
+
+
 def test_paged_rejects_recurrent_mixers():
     from repro.configs import get_config
     cfg = get_config("recurrentgemma-9b")

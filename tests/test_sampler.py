@@ -1,12 +1,15 @@
-"""Direct unit tests for ``serving/sampler.py::sample_logits_batch``: the
-fused decode step samples every slot in one call with per-row temperature,
-so greedy rows must be exact argmax, stochastic rows must respect top-k
-masking, and the whole thing must stay jit-traceable with mixed rows."""
+"""Direct unit tests for ``serving/sampler.py``: the fused decode step
+samples every slot in one call with per-row temperature, so greedy rows
+must be exact argmax, stochastic rows must respect top-k masking, and the
+whole thing must stay jit-traceable with mixed rows. The keyed variant
+derives per-row keys from (request_id, step), so a request's stream is
+independent of batch composition."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.sampler import sample_logits, sample_logits_batch
+from repro.serving.sampler import (request_keys, sample_logits,
+                                   sample_logits_batch, sample_logits_keyed)
 
 
 def _logits(seed=0, b=8, v=64):
@@ -64,6 +67,46 @@ def test_jit_traceable_with_mixed_rows():
     # retrace-free across different row mixes (shapes unchanged)
     out2 = fn(jax.random.PRNGKey(1), logits, jnp.flip(temp))
     assert out2.shape == (8,)
+
+
+def test_request_keys_pure_function_of_rid_and_step():
+    base = jax.random.PRNGKey(0)
+    a = request_keys(base, jnp.asarray([3, 7]), jnp.asarray([0, 5]))
+    b = request_keys(base, jnp.asarray([7, 3, 9]), jnp.asarray([5, 0, 1]))
+    # same (rid, step) -> same key, wherever it sits in the batch
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[1]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[0]))
+    # different step or rid -> different key
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(a[1]))
+
+
+def test_keyed_sampling_independent_of_batch_composition():
+    """The satellite contract at the sampler level: a row's sample depends
+    only on its own (key, logits, temperature), not on its neighbors."""
+    logits = _logits(6, b=4, v=32)
+    temp = jnp.full((4,), 1.0, jnp.float32)
+    base = jax.random.PRNGKey(1)
+    rids = jnp.asarray([0, 1, 2, 3])
+    steps = jnp.asarray([0, 4, 2, 0])
+    keys = request_keys(base, rids, steps)
+    full = np.asarray(sample_logits_keyed(keys, logits, temp))
+    # the same rows shuffled into a different batch order
+    perm = jnp.asarray([2, 0, 3, 1])
+    shuf = np.asarray(sample_logits_keyed(
+        request_keys(base, rids[perm], steps[perm]), logits[perm],
+        temp[perm]))
+    for i, p in enumerate(np.asarray(perm)):
+        assert shuf[i] == full[p]
+
+
+def test_keyed_sampling_greedy_rows_exact():
+    logits = _logits(7)
+    temp = jnp.asarray([0.0, 1.0] * 4, jnp.float32)
+    keys = request_keys(jax.random.PRNGKey(2), jnp.arange(8),
+                        jnp.zeros((8,), jnp.int32))
+    out = np.asarray(sample_logits_keyed(keys, logits, temp))
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))
+    np.testing.assert_array_equal(out[::2], greedy[::2])
 
 
 def test_single_stream_sampler_consistency():

@@ -1,0 +1,343 @@
+"""Token-budget scheduler: plan arithmetic (pure unit tests) and the
+engine-level acceptance contract — chunked prefill, interleaved with decode
+under a token budget, generates token-for-token what the unchunked engine
+does, on both cache layouts, including shared-prefix and copy-on-write
+admissions; and per-request sampling keys make temperature > 0 streams
+independent of co-scheduling."""
+import collections
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (MLA, SWIGLU, BlockDef, MLAConfig, ModelConfig,
+                                Stage, dense_stages)
+from repro.models.model import LM
+from repro.serving import ServingEngine
+from repro.serving.scheduler import (MONOLITHIC, PrefillProgress, Scheduler,
+                                     chunk_buckets)
+
+
+def _tiny_cfg(layers=2, window=None):
+    return ModelConfig(
+        name="tiny", family="dense", source="t", num_layers=layers,
+        d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        vocab_size=64, stages=dense_stages(layers, window=window),
+        param_dtype="float32")
+
+
+def _mla_cfg():
+    return ModelConfig(
+        name="tiny-mla", family="mla", source="t", num_layers=2,
+        d_model=32, num_heads=4, num_kv_heads=4, head_dim=8, d_ff=64,
+        vocab_size=64,
+        stages=(Stage(blocks=(BlockDef(mixer=MLA, mlp=SWIGLU),), repeat=2),),
+        param_dtype="float32",
+        mla=MLAConfig(q_lora_rank=16, kv_lora_rank=8, qk_nope_head_dim=8,
+                      qk_rope_head_dim=4, v_head_dim=8))
+
+
+def _lm(cfg):
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    return lm, params
+
+
+def _mixed_trace(n=7, seed=1, lo=3, hi=14):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 60, size=int(rng.integers(lo, hi))),
+             int(rng.integers(3, 9))) for _ in range(n)]
+
+
+def _run(lm, params, trace, temperature=0.0, **kw):
+    eng = ServingEngine(lm, params, max_seq_len=32, min_bucket=4, **kw)
+    for prompt, max_new in trace:
+        eng.submit(prompt, max_new_tokens=max_new, temperature=temperature)
+    return eng, {rid: r.output for rid, r in eng.run().items()}
+
+
+def _assert_same(a, b):
+    assert set(a) == set(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid], b[rid])
+
+
+# ---------------------------------------------------------------------------
+# Plan arithmetic (no engine, no device)
+# ---------------------------------------------------------------------------
+
+def _pp(slot, nxt, total):
+    return PrefillProgress(request=None, slot=slot, next=nxt, total=total)
+
+
+def test_plan_respects_token_budget():
+    s = Scheduler(batch_slots=4, chunk_tokens=8, token_budget=12)
+    prefilling = collections.OrderedDict(
+        [(0, _pp(0, 0, 20)), (1, _pp(1, 4, 6))])
+    plan = s.plan_step(n_active=3, prefilling=prefilling,
+                       try_admit=lambda: None)
+    # 3 decode tokens + chunks within the remaining 9; the leftover token
+    # is NOT spent on a runt chunk (a full dispatch for a 1-token sliver)
+    spent = 3 + sum(c.length for c in plan.chunks)
+    assert spent <= 12
+    assert [(c.slot, c.length) for c in plan.chunks] == [(0, 8)]
+
+
+def test_plan_first_chunk_never_starved():
+    """The first chunk of a step always proceeds in full, even when active
+    decodes already exceed the budget — prefill cannot be starved."""
+    s = Scheduler(batch_slots=4, chunk_tokens=8, token_budget=6)
+    prefilling = collections.OrderedDict([(0, _pp(0, 0, 20))])
+    plan = s.plan_step(n_active=5, prefilling=prefilling,
+                       try_admit=lambda: None)
+    assert [(c.slot, c.start, c.length) for c in plan.chunks] == [(0, 0, 8)]
+
+
+def test_plan_marks_final_chunk_and_splits_long_prompts():
+    s = Scheduler(batch_slots=1, chunk_tokens=4, token_budget=64)
+    prefilling = collections.OrderedDict([(0, _pp(0, 0, 10))])
+    plan = s.plan_step(n_active=0, prefilling=prefilling,
+                       try_admit=lambda: None)
+    assert [(c.start, c.length) for c in plan.chunks] == \
+        [(0, 4), (4, 4), (8, 2)]
+    assert [c.final for c in plan.chunks] == [False, False, True]
+    # chunk shapes come from the bucketed set
+    assert all(c.bucket in s.buckets for c in plan.chunks)
+
+
+def test_plan_admits_into_leftover_budget():
+    s = Scheduler(batch_slots=2, chunk_tokens=8, token_budget=11)
+    admitted = [_pp(2, 0, 6), _pp(3, 0, 6)]
+
+    def try_admit():
+        return admitted.pop(0) if admitted else None
+
+    plan = s.plan_step(n_active=2, prefilling=collections.OrderedDict(),
+                       try_admit=try_admit)
+    # 2 decodes + first admission's 6-token prompt leaves 3 tokens: the
+    # second admission is still granted its slot, but its prompt (> the
+    # leftover) starts as a full chunk next step rather than as a runt now
+    assert plan.admitted == 2
+    spent = 2 + sum(c.length for c in plan.chunks)
+    assert spent <= 11
+    assert [(c.slot, c.length, c.final) for c in plan.chunks] == \
+        [(2, 6, True)]
+
+
+def test_unchunked_scheduler_admits_greedily():
+    s = Scheduler(batch_slots=2, chunk_tokens=None)
+    grants = [MONOLITHIC, MONOLITHIC]
+
+    def try_admit():
+        return grants.pop(0) if grants else None
+
+    plan = s.plan_step(n_active=1, prefilling=collections.OrderedDict(),
+                       try_admit=try_admit)
+    assert plan.admitted == 2 and plan.chunks == ()
+
+
+def test_scheduler_rejects_starving_budget():
+    with pytest.raises(ValueError, match="must exceed batch_slots"):
+        Scheduler(batch_slots=8, chunk_tokens=4, token_budget=8)
+
+
+def test_chunk_buckets_cover_chunk_range():
+    assert chunk_buckets(16) == [8, 16]
+    assert chunk_buckets(4) == [4]
+    assert chunk_buckets(1) == [1]
+
+
+# ---------------------------------------------------------------------------
+# Engine-level exactness: the acceptance contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_chunked_matches_unchunked_ring():
+    lm, params = _lm(_tiny_cfg())
+    trace = _mixed_trace(n=7, seed=2)
+    _, base = _run(lm, params, trace, batch_slots=3)
+    for kw in (dict(chunk_tokens=4),
+               dict(chunk_tokens=4, token_budget=5),
+               dict(chunk_tokens=8, token_budget=32)):
+        _, out = _run(lm, params, trace, batch_slots=3, **kw)
+        _assert_same(base, out)
+
+
+@pytest.mark.slow
+def test_chunked_matches_unchunked_paged():
+    lm, params = _lm(_tiny_cfg())
+    trace = _mixed_trace(n=7, seed=3)
+    _, base = _run(lm, params, trace, batch_slots=3)
+    # ample and starved pools (block pressure delays admission mid-trace)
+    for extra in ({}, {"num_pool_blocks": 9}):
+        _, out = _run(lm, params, trace, batch_slots=3, chunk_tokens=4,
+                      cache_backend="paged", block_size=8, **extra)
+        _assert_same(base, out)
+
+
+@pytest.mark.slow
+def test_chunked_matches_unchunked_mla():
+    lm, params = _lm(_mla_cfg())
+    trace = _mixed_trace(n=5, seed=4)
+    _, base = _run(lm, params, trace, batch_slots=2)
+    _, out = _run(lm, params, trace, batch_slots=2, chunk_tokens=4,
+                  cache_backend="paged", block_size=8)
+    _assert_same(base, out)
+
+
+@pytest.mark.slow
+def test_chunked_windowed_paged_matches_oracle():
+    """Windowed layers through the paged chunked path: exact against the
+    step-by-step full-forward oracle (chunk install is position-addressed,
+    so nothing in the window is ever evicted early)."""
+    import jax.numpy as jnp
+    lm, params = _lm(_tiny_cfg(window=8))
+    trace = _mixed_trace(n=4, seed=5)
+    _, base = _run(lm, params, trace, batch_slots=2)
+    _, out = _run(lm, params, trace, batch_slots=2, chunk_tokens=4,
+                  cache_backend="paged", block_size=8)
+    _assert_same(base, out)
+    # one request against the autoregressive full-forward ground truth
+    prompt, budget = trace[0]
+    cur = list(prompt)
+    for _ in range(budget):
+        logits, _, _, _ = lm.forward(
+            params, {"tokens": jnp.asarray(np.asarray(cur)[None], jnp.int32)})
+        cur.append(int(jnp.argmax(logits[0, -1])))
+    np.testing.assert_array_equal(out[0], np.asarray(cur[len(prompt):]))
+
+
+def test_chunked_refuses_windowed_ring():
+    """Ring + window: a window-wide ring evicts tokens the chunk's own
+    queries still need — must refuse at construction, not corrupt."""
+    lm, params = _lm(_tiny_cfg(window=8))
+    with pytest.raises(NotImplementedError, match="paged backend"):
+        ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                      chunk_tokens=4)
+
+
+def test_chunked_refuses_recurrent_mixers():
+    from repro.configs import get_config
+    cfg = get_config("recurrentgemma-9b")
+    lm = LM(cfg)
+    with pytest.raises(NotImplementedError, match="attention mixers"):
+        ServingEngine(lm, params=None, batch_slots=2, max_seq_len=32,
+                      chunk_tokens=4)
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing + copy-on-write
+# ---------------------------------------------------------------------------
+
+def _templated_trace(n=6, seed=6, template_len=16, include_exact=True):
+    rng = np.random.default_rng(seed)
+    template = rng.integers(0, 60, size=template_len).astype(np.int32)
+    trace = [(np.concatenate([
+        template, rng.integers(0, 60, size=int(rng.integers(1, 8)))
+        .astype(np.int32)]), int(rng.integers(3, 7))) for _ in range(n - 1)]
+    if include_exact:
+        # block-aligned full-cover prompt: admission must COW the final
+        # shared block before recomputing the last token
+        trace.append((template.copy(), 5))
+    return trace
+
+
+@pytest.mark.slow
+def test_shared_prefix_exact_and_skips_prefill():
+    lm, params = _lm(_tiny_cfg())
+    trace = _templated_trace()
+    _, base = _run(lm, params, trace, batch_slots=3)
+    eng, out = _run(lm, params, trace, batch_slots=3, chunk_tokens=8,
+                    cache_backend="paged", block_size=8)
+    _assert_same(base, out)
+    assert eng.prefill_tokens_skipped > 0
+    assert eng.prefill_tokens_skipped < eng.prefill_tokens_total
+    be = eng.backend
+    assert be.cow_copies >= 1               # the exact-template admission
+    # accounting invariant: everything returned, refcounts all zero
+    assert be.blocks_in_use == 0
+    assert be._ref == {}
+    assert be._index == {}
+    assert sorted(be._free) == list(range(1, be.num_blocks))
+
+
+@pytest.mark.slow
+def test_cow_divergence_matches_solo_runs():
+    """Two identical block-aligned prompts with different budgets and
+    temperatures share every prompt block; the second admission copies the
+    final block (COW) and both decode streams must match their solo runs
+    token-for-token — sharing never lets one request's divergence leak
+    into another's cache."""
+    lm, params = _lm(_tiny_cfg())
+    rng = np.random.default_rng(7)
+    template = rng.integers(0, 60, size=16).astype(np.int32)
+    kw = dict(batch_slots=2, chunk_tokens=8, cache_backend="paged",
+              block_size=8)
+
+    def solo(rid, max_new, temperature):
+        # same request_id (submission order) so sampling keys line up
+        eng = ServingEngine(lm, params, max_seq_len=32, min_bucket=4, **kw)
+        for _ in range(rid):
+            eng.submit(np.arange(4), max_new_tokens=1)
+        eng.submit(template, max_new_tokens=max_new,
+                   temperature=temperature)
+        return eng.run()[rid].output
+
+    eng = ServingEngine(lm, params, max_seq_len=32, min_bucket=4, **kw)
+    # rid 0: owns the template blocks and decodes long enough that rid 2
+    # is admitted (into rid 1's freed slot) while they are still live;
+    # rid 2's identical block-aligned prompt then shares all of them and
+    # must COW the final block before recomputing its last-token logits
+    eng.submit(template, max_new_tokens=8, temperature=0.0)
+    eng.submit(np.arange(4), max_new_tokens=1)
+    eng.submit(template, max_new_tokens=4, temperature=0.9)
+    done = eng.run()
+    assert eng.backend.cow_copies >= 1
+    np.testing.assert_array_equal(done[0].output, solo(0, 8, 0.0))
+    np.testing.assert_array_equal(done[2].output, solo(2, 4, 0.9))
+    assert eng.backend.blocks_in_use == 0
+
+
+def test_sharing_disabled_skips_nothing():
+    lm, params = _lm(_tiny_cfg())
+    trace = _templated_trace(n=4)
+    eng, _ = _run(lm, params, trace, batch_slots=2, chunk_tokens=8,
+                  cache_backend="paged", block_size=8, prefix_sharing=False)
+    assert eng.prefill_tokens_skipped == 0
+    assert eng.backend.cow_copies == 0
+
+
+# ---------------------------------------------------------------------------
+# Per-request sampling keys (satellite regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sampled_outputs_independent_of_coscheduling():
+    """temperature > 0 outputs are a pure function of (request_id, step):
+    the same submissions through different slot counts — and through the
+    chunked scheduler — sample identical streams."""
+    lm, params = _lm(_tiny_cfg())
+    trace = _mixed_trace(n=6, seed=8)
+    outs = []
+    for kw in (dict(batch_slots=1), dict(batch_slots=4),
+               dict(batch_slots=3, chunk_tokens=4),
+               dict(batch_slots=3, chunk_tokens=4, cache_backend="paged",
+                    block_size=8)):
+        _, out = _run(lm, params, trace, temperature=0.8, **kw)
+        outs.append(out)
+    for other in outs[1:]:
+        _assert_same(outs[0], other)
+
+
+def test_ttft_and_admit_recorded():
+    lm, params = _lm(_tiny_cfg())
+    from repro.serving import DrainBatchEngine
+    for cls, kw in ((ServingEngine, dict(min_bucket=4)),
+                    (ServingEngine, dict(min_bucket=4, chunk_tokens=4)),
+                    (DrainBatchEngine, {})):
+        eng = cls(lm, params, batch_slots=2, max_seq_len=32, **kw)
+        for prompt, max_new in _mixed_trace(n=3, seed=9):
+            eng.submit(prompt, max_new_tokens=max_new)
+        for r in eng.run().values():
+            assert r.admit_s >= r.submit_s > 0
+            assert 0 < r.ttft_s <= r.latency_s

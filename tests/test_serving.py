@@ -36,6 +36,25 @@ def test_prefill_then_decode_matches_full_forward():
         assert err < 1e-3, (t, err)
 
 
+def test_prompt_buckets_and_bucket_for_edge_cases():
+    from repro.serving import bucket_for, prompt_buckets
+    # powers of two from min_bucket up to (and always including) the max
+    assert prompt_buckets(128, 16) == [16, 32, 64, 128]
+    # non-power-of-two max is still the top bucket
+    assert prompt_buckets(100, 16) == [16, 32, 64, 100]
+    # min_bucket == max -> a single bucket
+    assert prompt_buckets(16, 16) == [16]
+    # min_bucket above max still yields a usable top bucket
+    assert prompt_buckets(8, 16) == [8]
+    buckets = prompt_buckets(64, 8)
+    # boundaries snap to their own bucket, not the next one
+    for n, expect in ((1, 8), (8, 8), (9, 16), (16, 16), (17, 32),
+                      (63, 64), (64, 64)):
+        assert bucket_for(n, buckets) == expect, n
+    with pytest.raises(ValueError, match="exceeds the largest"):
+        bucket_for(65, buckets)
+
+
 def test_serving_engine_batches_and_completes():
     from repro.serving import ServingEngine
     cfg = _tiny_cfg()
