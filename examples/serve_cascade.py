@@ -51,16 +51,19 @@ def main():
               f"edge/cloud agreement={m.agreement:.2f}")
 
     # continuous-batching autoregressive serving: 8 mixed-length requests
-    # share 4 slots; new requests slide in as short ones finish
+    # share 4 slots; new requests slide in as short ones finish, and
+    # multi-step decode scans up to 8 fused decode steps per host sync
     eng = ServingEngine(cloud, cp, batch_slots=4, max_seq_len=64,
-                        min_bucket=8, cache_backend=args.cache_backend)
+                        min_bucket=8, cache_backend=args.cache_backend,
+                        max_decode_steps=8)
     for i in range(8):
         eng.submit(rng.integers(0, 100, size=5 + 3 * i),
                    max_new_tokens=4 + 2 * i)
     done = eng.run()
     print(f"\ncontinuous-batching engine [{args.cache_backend}] served "
           f"{len(done)} requests in {eng.decode_steps} decode steps "
-          f"(occupancy {eng.occupancy():.0%}, "
+          f"across {eng.host_syncs} host syncs "
+          f"(dispatch utilization {eng.occupancy():.0%}, "
           f"KV HBM {eng.hbm_bytes() / 1024:.0f} KiB), e.g. "
           f"req0 -> {done[0].output.tolist()}")
 

@@ -375,6 +375,18 @@ class LM:
             caches.append(stacked)
         return caches
 
+    def chunk_incompatible_mixer(self) -> Optional[str]:
+        """First mixer kind that cannot consume multi-token prompt chunks
+        (recurrent states fold tokens strictly sequentially), or None when
+        every stage is attention. One-token decode — including the serving
+        engines' K-step decode scan, which carries recurrent state through
+        ``lax.scan`` like any other cache leaf — works for every mixer."""
+        for stage in self.cfg.stages:
+            for bdef in stage.blocks:
+                if bdef.mixer not in (ATTN, MLA):
+                    return bdef.mixer
+        return None
+
     def decode_step(self, params, caches, tokens, cur_pos, *,
                     layout=None, block_tables=None, valid=None):
         """One-token decode. tokens: (B, 1) (audio: (B, 1, C));
@@ -384,7 +396,13 @@ class LM:
         (``repro.serving.kv_cache``; None = per-slot ring caches);
         ``valid`` is an optional (B, 1) mask — False rows compute logits
         but leave the cache untouched (inactive serving slots).
-        Returns (logits (B, 1, V...), new caches)."""
+        Returns (logits (B, 1, V...), new caches).
+
+        Scan-carry clean: the returned cache pytree has exactly the input's
+        treedef, shapes and dtypes, and every index the step computes
+        derives from traced operands — so engines may ``lax.scan`` K decode
+        steps with (caches, sampling state) as the carry and pay one
+        dispatch per K tokens (multi-step decode)."""
         return self.prefill_chunk(params, caches, tokens, cur_pos,
                                   layout=layout, block_tables=block_tables,
                                   valid=valid)
@@ -414,12 +432,11 @@ class LM:
         cfg = self.cfg
         t = tokens.shape[1]
         if t > 1:
-            for stage in cfg.stages:
-                for bdef in stage.blocks:
-                    if bdef.mixer not in (ATTN, MLA):
-                        raise NotImplementedError(
-                            f"prefill_chunk needs attention mixers "
-                            f"(got {bdef.mixer!r}); chunk length must be 1")
+            bad = self.chunk_incompatible_mixer()
+            if bad is not None:
+                raise NotImplementedError(
+                    f"prefill_chunk needs attention mixers "
+                    f"(got {bad!r}); chunk length must be 1")
         start_pos = att.positions_1d(start_pos, tokens.shape[0])
         batch = {"tokens": tokens}
         if cfg.frontend.kind == "vision":

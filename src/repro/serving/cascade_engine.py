@@ -93,20 +93,25 @@ class CascadeServingEngine:
                  truncate_prompts: bool = False,
                  chunk_tokens: Optional[int] = None,
                  token_budget: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 max_decode_steps: int = 1):
         from repro.serving.engine import ServingEngine
         self.cascade = cascade
         self.max_seq_len = max_seq_len
         self.truncate_prompts = truncate_prompts
         self.metrics = CascadeMetrics()
         # both engines execute the same scheduler policy (token budget /
-        # chunked prefill / prefix sharing flow straight through)
+        # chunked prefill / prefix sharing / multi-step decode horizons
+        # flow straight through); on a weak edge host the decode scan is
+        # the bigger lever — the per-token host round-trip it removes is
+        # exactly the edge-side overhead ACE's optimization layer targets
         engine_kw = dict(batch_slots=batch_slots, max_seq_len=max_seq_len,
                          eos_id=eos_id, cache_backend=cache_backend,
                          block_size=block_size,
                          num_pool_blocks=num_pool_blocks,
                          chunk_tokens=chunk_tokens, token_budget=token_budget,
-                         prefix_sharing=prefix_sharing)
+                         prefix_sharing=prefix_sharing,
+                         max_decode_steps=max_decode_steps)
         self.edge_engine = ServingEngine(cascade.edge, edge_params,
                                          seed=seed, **engine_kw)
         self.cloud_engine = ServingEngine(cascade.cloud, cloud_params,

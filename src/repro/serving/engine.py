@@ -8,8 +8,22 @@ bucketed to a small set of power-of-two shapes, bounding prefill
 recompilation to ``len(buckets)`` variants regardless of traffic. The decode
 inner step is one fused jitted call — sample → cache-append →
 done-detection all on device — and the Python loop performs a single small
-host sync per step (the (B,) active mask) for EOS/slot management; logits
+host sync per round (the (B,) active mask) for EOS/slot management; logits
 never leave the device.
+
+With ``max_decode_steps=K`` the engine goes further: pure-decode rounds
+``lax.scan`` up to K fused steps inside one jit, paying one dispatch and
+one host sync per K generated tokens (multi-step decode). Everything the
+step needs — sampling keys folded from the carried ``(request_id, steps)``,
+per-slot positions, the EOS/budget active mask — already lives in the
+on-device carry, so the scan is exactly K repetitions of the single-step
+program and outputs are token-for-token identical at every K. The
+scheduler collapses the horizon to 1 whenever prefill work is pending (or
+a request was just admitted), preserving chunked-prefill TTFT behavior,
+and caps it by the smallest active slot's remaining budget. Paged slots
+get a look-ahead block reservation (``reserve_lookahead`` →
+``begin_slot``) before each scan so every in-scan append lands in an
+allocated block.
 
 Scheduling policy lives in ``repro.serving.scheduler``: each step the
 ``Scheduler`` composes a mixed batch under a token budget — decode tokens
@@ -56,7 +70,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ATTN, MLA
 from repro.models.model import LM
 from repro.serving.kv_cache import RingLayout, make_backend
 from repro.serving.sampler import (request_keys, sample_logits_batch,
@@ -127,7 +140,8 @@ class ServingEngine:
                  truncate_prompts: bool = False,
                  chunk_tokens: Optional[int] = None,
                  token_budget: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 max_decode_steps: int = 1):
         if lm.cfg.frontend.kind == "audio":
             raise NotImplementedError("engine serves text-token streams")
         self.lm = lm
@@ -147,13 +161,24 @@ class ServingEngine:
         self._prefilling: Dict[int, PrefillProgress] = \
             collections.OrderedDict()
         self._done: Dict[int, Request] = {}
-        # perf counters (slot occupancy / prefix sharing for bench_serving)
+        # host-side mirror of each live slot's completed decode steps: a
+        # slot active at a sync advanced exactly the scanned step count, so
+        # this is exact for live slots and gives the scheduler its budget
+        # headroom (and the look-ahead reservation its positions) without
+        # an extra device pull
+        self._scanned: Dict[int, int] = {}
+        # perf counters (dispatch/occupancy/sharing for bench_serving):
+        # decode_steps counts *token* rounds (a K-scan adds K), host_syncs
+        # counts active-mask transfers (a K-scan adds 1)
         self.decode_steps = 0
-        self.occupied_slot_steps = 0
+        self.host_syncs = 0
         self.generated_tokens = 0
         self.peak_active_slots = 0
         self.prefill_tokens_total = 0
         self.prefill_tokens_skipped = 0
+        # scheduled-vs-useful token-slot accounting (see ``occupancy``)
+        self.planned_token_slots = 0
+        self.useful_prefill_tokens = 0
 
         if chunk_tokens is not None:
             self._validate_chunk_mixers(chunk_tokens)
@@ -166,7 +191,8 @@ class ServingEngine:
             self._validate_chunk_layout()
         self.scheduler = Scheduler(batch_slots=batch_slots,
                                    chunk_tokens=chunk_tokens,
-                                   token_budget=token_budget)
+                                   token_budget=token_budget,
+                                   max_decode_steps=max_decode_steps)
         # prefix sharing hashes prompt tokens at admission; only meaningful
         # with chunked install (monolithic prefill recomputes everything)
         self._admit_with_tokens = (
@@ -190,6 +216,8 @@ class ServingEngine:
         self._admit_fn = jax.jit(self._admit_impl,
                                  donate_argnums=(1, 2))  # retraces per bucket
         self._step_fn = jax.jit(self._step_impl, donate_argnums=(1, 2))
+        self._scan_fn = jax.jit(self._scan_impl, donate_argnums=(1, 2),
+                                static_argnums=(4,))     # per horizon K
         self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1, 2),
                                  static_argnums=(12,))   # per (bucket, ctx)
         self._begin_fn = jax.jit(self.backend.begin_slot, donate_argnums=0)
@@ -200,13 +228,12 @@ class ServingEngine:
         if not (1 <= chunk_tokens <= self.max_seq_len):
             raise ValueError(f"chunk_tokens ({chunk_tokens}) must be in "
                              f"[1, max_seq_len={self.max_seq_len}]")
-        for stage in self.lm.cfg.stages:
-            for bdef in stage.blocks:
-                if bdef.mixer not in (ATTN, MLA):
-                    raise NotImplementedError(
-                        f"chunked prefill needs attention mixers (got "
-                        f"{bdef.mixer!r}); recurrent state folds tokens "
-                        f"sequentially — use chunk_tokens=None")
+        bad = self.lm.chunk_incompatible_mixer()
+        if bad is not None:
+            raise NotImplementedError(
+                f"chunked prefill needs attention mixers (got "
+                f"{bad!r}); recurrent state folds tokens "
+                f"sequentially — use chunk_tokens=None")
 
     def _validate_chunk_layout(self) -> None:
         if not isinstance(self.backend.layout, RingLayout):
@@ -232,33 +259,46 @@ class ServingEngine:
         return rid
 
     def warm_compile(self) -> None:
-        """Pre-compile every chunk-program variant. Chunk programs retrace
-        per (chunk bucket × context bucket) — a small static product — and
-        an XLA compile landing mid-traffic (~1 s) would dominate some
-        request's TTFT. Each variant runs once against slot 0 with
-        ``max_new = 0`` and no table row installed, so nothing observable
-        changes (the junk K/V is wiped by the next admission's
-        ``begin_slot`` / monolithic install). Call while idle — before
-        serving traffic — never mid-run."""
-        if not self.scheduler.chunked:
-            return
-        for bucket in self.scheduler.buckets:
-            ctxs = set()
-            ctx = _next_pow2(bucket)
-            while ctx < self.max_seq_len:
-                ctxs.add(ctx)
-                ctx *= 2
-            ctxs.add(self.max_seq_len)
-            for ctx in sorted(ctxs):
-                self._cache_state, self._state = self._chunk_fn(
-                    self.params, self._cache_state, self._state,
-                    jnp.zeros((1, bucket), jnp.int32), jnp.int32(0),
-                    jnp.int32(1), jnp.int32(0), jnp.int32(1), jnp.int32(0),
-                    jnp.float32(0.0), jnp.int32(0), jnp.bool_(False), ctx)
+        """Pre-compile every chunk-program variant and every decode-scan
+        horizon. Chunk programs retrace per (chunk bucket × context bucket)
+        and the scan per horizon in the scheduler's ``k_schedule`` — small
+        static sets — and an XLA compile landing mid-traffic (~1 s) would
+        dominate some request's TTFT (or a multi-K-token stall). Each chunk
+        variant runs once against slot 0 with ``max_new = 0`` and no table
+        row installed; each scan variant runs once with every slot inactive
+        — so nothing observable changes (masked appends land out of bounds
+        or in the trash block, outputs and positions stay untouched, and
+        the junk ``last`` logits are re-armed by any real admission). Call
+        while idle — before serving traffic — never mid-run."""
+        if self.scheduler.chunked:
+            for bucket in self.scheduler.buckets:
+                ctxs = set()
+                ctx = _next_pow2(bucket)
+                while ctx < self.max_seq_len:
+                    ctxs.add(ctx)
+                    ctx *= 2
+                ctxs.add(self.max_seq_len)
+                for ctx in sorted(ctxs):
+                    self._cache_state, self._state = self._chunk_fn(
+                        self.params, self._cache_state, self._state,
+                        jnp.zeros((1, bucket), jnp.int32), jnp.int32(0),
+                        jnp.int32(1), jnp.int32(0), jnp.int32(1),
+                        jnp.int32(0), jnp.float32(0.0), jnp.int32(0),
+                        jnp.bool_(False), ctx)
         if hasattr(self, "_copy_fn"):
             # copying the trash block onto itself is a no-op by definition
             self._cache_state = self._copy_fn(self._cache_state,
                                               jnp.int32(0), jnp.int32(0))
+        # decode executables: the single step plus every scan horizon the
+        # scheduler may pick, so first-request latency never pays scan
+        # compilation (all slots inactive -> the run is a pure no-op)
+        self._cache_state, self._state = self._step_fn(
+            self.params, self._cache_state, self._state, self._base_key)
+        for k in self.scheduler.k_schedule:
+            if k > 1:
+                self._cache_state, self._state = self._scan_fn(
+                    self.params, self._cache_state, self._state,
+                    self._base_key, k)
 
     @property
     def pending(self) -> bool:
@@ -271,15 +311,19 @@ class ServingEngine:
         with serving (see ``benchmarks/bench_serving.py``); ``run`` is just
         this in a drain loop."""
         slots, free, prefilling = self._slots, self._free, self._prefilling
+        min_headroom = min(
+            (r.max_new_tokens - self._scanned.get(s, 0)
+             for s, r in slots.items()), default=None)
         plan = self.scheduler.plan_step(
             n_active=len(slots), prefilling=prefilling,
-            try_admit=lambda: self._try_admit(slots, free, prefilling))
+            try_admit=lambda: self._try_admit(slots, free, prefilling),
+            min_headroom=min_headroom)
         for c in plan.chunks:
             self._run_chunk(c, prefilling, slots)
         if slots:
             self.peak_active_slots = max(self.peak_active_slots,
                                          len(slots) + len(prefilling))
-            self._decode_round(slots, free, self._done)
+            self._decode_round(slots, free, self._done, plan.decode_steps)
         elif not plan.chunks and not prefilling and self._queue:
             # nothing running and the head of the queue can never fit
             nxt = self._queue[0]
@@ -383,6 +427,29 @@ class ServingEngine:
         }
         return {"caches": caches, "tables": cache_state["tables"]}, state
 
+    def _scan_impl(self, params, cache_state, state, base_key, k):
+        """Multi-step decode: ``lax.scan`` ``k`` (static) fused decode
+        steps inside one jit — one dispatch and one host sync per ``k``
+        tokens. The carry is exactly the single-step program's
+        (caches, state): sampling keys fold the *carried* (request_id,
+        steps), positions and the active mask advance on device, and rows
+        that finish mid-scan (EOS / budget) go inactive and no-op through
+        the remaining iterations (masked appends, unwritten outputs) — so
+        outputs are token-for-token the K=1 engine's at every k. Block
+        tables are scan-invariant (the host reserves look-ahead blocks
+        before dispatch), so they ride as a closure constant, not carry."""
+        tables = cache_state["tables"]
+
+        def body(carry, _):
+            caches, st = carry
+            new_cache, st = self._step_impl(
+                params, {"caches": caches, "tables": tables}, st, base_key)
+            return (new_cache["caches"], st), None
+
+        (caches, state), _ = jax.lax.scan(
+            body, (cache_state["caches"], state), xs=None, length=k)
+        return {"caches": caches, "tables": tables}, state
+
     # -- host-side management -------------------------------------------------
     def _try_admit(self, slots, free, prefilling):
         """Scheduler admission callback: grant the queue head a slot plus
@@ -420,6 +487,8 @@ class ServingEngine:
     def _run_chunk(self, c, prefilling, slots):
         pp = prefilling[c.slot]
         r = pp.request
+        self.planned_token_slots += c.bucket
+        self.useful_prefill_tokens += c.length
         tokens = np.zeros((1, c.bucket), np.int32)
         tokens[0, :c.length] = r.prompt[c.start:c.start + c.length]
         # static context bound: next power of two covering the padded chunk
@@ -437,6 +506,7 @@ class ServingEngine:
             # the slot's full prompt blocks now hold real K/V: publish them
             # for prefix sharing by later admissions
             self.backend.register_prefix(c.slot, r.prompt)
+            self._scanned[c.slot] = 0
             slots[c.slot] = r
 
     def _admit(self, r: Request, slot: int, slots: Dict[int, Request]):
@@ -452,24 +522,53 @@ class ServingEngine:
             jnp.asarray(table_row))
         r.admit_s = time.perf_counter()
         self.prefill_tokens_total += length
+        self.planned_token_slots += bucket
+        self.useful_prefill_tokens += length
+        self._scanned[slot] = 0
         slots[slot] = r
 
-    def _decode_round(self, slots, free, done):
+    def _reserve_lookahead(self, slots, k: int) -> None:
+        """Top every active slot's cache reservation up to ``pos + k``
+        tokens before a decode round: inside a K-scan the host cannot
+        intervene, so each append the scan will perform must already have
+        an allocated block. The allocator's admission-time commitment
+        guarantees the draw succeeds; the new row replays through the
+        ``begin_slot`` seam, which wipes only the *new* blocks' stale
+        positions."""
+        for slot, r in slots.items():
+            row, covered = self.backend.reserve_lookahead(
+                slot, len(r.prompt) + self._scanned[slot] + k)
+            if row is not None:
+                self._cache_state = self._begin_fn(
+                    self._cache_state, jnp.int32(slot), jnp.asarray(row),
+                    jnp.int32(covered))
+
+    def _decode_round(self, slots, free, done, k: int = 1):
         if not slots:
             return
-        self._cache_state, self._state = self._step_fn(
-            self.params, self._cache_state, self._state, self._base_key)
-        self.decode_steps += 1
-        self.occupied_slot_steps += len(slots)
+        self._reserve_lookahead(slots, k)
+        if k == 1:
+            self._cache_state, self._state = self._step_fn(
+                self.params, self._cache_state, self._state, self._base_key)
+        else:
+            self._cache_state, self._state = self._scan_fn(
+                self.params, self._cache_state, self._state, self._base_key,
+                k)
+        self.decode_steps += k
+        self.host_syncs += 1
+        self.planned_token_slots += len(slots) * k
+        for slot in slots:
+            self._scanned[slot] += k
         active = np.asarray(self._state["active"])       # the one host sync
         now = time.perf_counter()
         for r in slots.values():
-            # every budget>0 member sampled a token in the step above;
+            # every budget>0 member sampled a token in the round above;
             # budget-0 requests never produce one and get no TTFT
             if r.ttft_s == 0.0 and r.max_new_tokens > 0:
                 r.ttft_s = now - r.submit_s
         for slot in [s for s, _ in slots.items() if not active[s]]:
             r = slots.pop(slot)
+            self._scanned.pop(slot, None)
             n = int(self._state["steps"][slot])
             r.output = np.asarray(self._state["out"][slot, :n])
             r.finish_s = time.perf_counter()
@@ -482,8 +581,17 @@ class ServingEngine:
 
     # -- stats ----------------------------------------------------------------
     def occupancy(self) -> float:
-        return self.occupied_slot_steps / max(
-            self.decode_steps * self.batch_slots, 1)
+        """Useful tokens per *scheduled* token-slot across executed plans:
+        decode rounds schedule ``len(slots) × K`` token-slots (tokens a
+        finished-mid-scan row doesn't produce are waste), prompt work
+        schedules its padded bucket (pad columns are waste). The old
+        ``occupied / (steps × batch_slots)`` denominator charged the engine
+        for slots the workload (or a block-starved pool) could never fill —
+        paged runs with a widened slot range misreported badly. Exact once
+        the engine has drained (in-flight tokens count only at
+        completion)."""
+        useful = self.generated_tokens + self.useful_prefill_tokens
+        return useful / max(self.planned_token_slots, 1)
 
     def hbm_bytes(self) -> int:
         """Device-resident KV-cache footprint of this engine."""
@@ -510,6 +618,7 @@ class DrainBatchEngine:
         self._queue: List[Request] = []
         self._next_id = 0
         self.generated_tokens = 0
+        self.host_syncs = 0     # one logits round-trip per decoded token
 
         windowed = _has_windowed_blocks(lm)
 
@@ -568,6 +677,7 @@ class DrainBatchEngine:
             self.rng, k = jax.random.split(self.rng)
             nxt = sample_logits_batch(k, last, temp)
             outs[:, t] = np.asarray(nxt)[:b]             # per-token host trip
+            self.host_syncs += 1
             if t == 0:
                 first = time.perf_counter()
                 for r in requests:

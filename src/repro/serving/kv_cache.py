@@ -17,9 +17,14 @@ completion (``free_slot``) and accounting (``hbm_bytes``). ``RingCache`` is
 the original behavior extracted: every slot pins a ``max_seq_len``-wide
 ring, so HBM per slot is worst-case. ``PagedCache`` is vLLM-style: one
 global pool of fixed-size blocks per layer plus a per-slot block table,
-with a host-side free-block allocator — admission reserves exactly
-``ceil((prompt + budget) / block_size)`` blocks, so concurrent slots are
-bounded by *live tokens*, not worst-case sequence length.
+with a host-side free-block allocator — admission *commits* to the
+worst-case ``ceil((prompt + budget) / block_size)`` blocks (so decode can
+never starve mid-flight: the commitment ledger guarantees every look-ahead
+top-up succeeds) but physically allocates lazily: blocks covering the
+prompt at admission, then ``reserve_lookahead`` tops the slot's table up
+to ``pos + K`` tokens before each K-step decode scan. Blocks the request
+never reaches (early EOS, unspent budget tail) are never drawn from the
+free list at all, and whatever was drawn returns at ``free_slot``.
 
 Paged conventions (shared by the Pallas kernel, the jnp oracle, and the
 engine):
@@ -31,9 +36,19 @@ engine):
 - per-token ``pos`` in the pool is −1 until written, and pad positions are
   installed as −1 at prefill, so a slot's visible context is exactly its
   real tokens.
+
+Freed prefix blocks are **retained**: a refcount-0 block whose content is
+registered in the prefix-hash index stays in the index and parks at the
+*back* of the free list (LRU order), so templated traffic shares prompt
+blocks across bursts, not just across concurrent requests — a later
+admission matching the prefix revives the block from the free list with
+its K/V intact. Cached free blocks are reclaimed last (plain free blocks
+first, then least-recently-freed cached ones), and eviction simply drops
+the index entry before the block is wiped for its new tenant.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import Any, Dict, List, Optional
@@ -96,7 +111,12 @@ class RingLayout:
         mode) and the cache is untouched. When a chunk is longer than the
         ring (windowed layers), only each ring slot's newest token is kept
         (the older ones would be overwritten within this same scatter, and
-        scatter order with duplicate indices is undefined)."""
+        scatter order with duplicate indices is undefined).
+
+        Scan-carry clean: every index derives from the traced ``cur_pos``
+        and the carried cache's static shape — no per-step host constants —
+        so engines may ``lax.scan`` K appends with the cache as carry
+        (multi-step decode), windowed ring widths included."""
         b, width = cache["pos"].shape
         start, pos, ok = _chunk_index(cur_pos, updates, valid, b)
         length = jnp.sum(ok.astype(jnp.int32), axis=1, keepdims=True)
@@ -134,7 +154,11 @@ class PagedLayout:
         """Write a T-token chunk (T = 1 for decode) at positions
         ``cur_pos + i``. Free / never-admitted slots have no blocks and
         invalid (pad / inactive) tokens must not write: both are parked in
-        the trash block (0) with pos −1."""
+        the trash block (0) with pos −1. Scan-carry clean like the ring:
+        all routing is traced (``block_tables`` may be a scan-invariant
+        closure constant), so K decode appends scan with the pool as carry
+        — the engine's look-ahead reservation guarantees every in-scan
+        position is covered by an allocated block."""
         assert block_tables is not None, "paged layout needs block tables"
         b, m = block_tables.shape
         _, pos, ok = _chunk_index(cur_pos, updates, valid, b)
@@ -247,6 +271,18 @@ class KVCacheBackend:
         """Write a ``slot_view`` caches pytree back (no-op for the paged
         pool, whose view aliases the global state)."""
         raise NotImplementedError
+
+    def reserve_lookahead(self, slot: int, tokens: int):
+        """Top up ``slot``'s physical reservation to cover ``tokens`` total
+        tokens (multi-step decode look-ahead: the engine calls this with
+        ``pos + K`` before scanning K fused decode steps, so every append
+        inside the scan lands in an allocated block). Returns
+        ``(new_table_row, previously_covered_entries)`` when blocks were
+        added — the engine replays it through the ``begin_slot`` seam,
+        which wipes only the new blocks' stale positions — or
+        ``(None, 0)`` when the slot is already covered (always, for
+        backends like the ring whose slots pin worst-case storage)."""
+        return None, 0
 
     def shared_prefill_start(self, slot: int) -> int:
         """First prompt position the engine must actually compute for
@@ -385,17 +421,32 @@ class RingCache(KVCacheBackend):
 
 class PagedCache(KVCacheBackend):
     """Block-table backend: a global pool of ``num_blocks`` blocks of
-    ``block_size`` tokens per layer, allocated per request at admission and
+    ``block_size`` tokens per layer, committed per request at admission and
     returned at completion. Slot count is bounded by live tokens in the
     pool, not by ``batch_slots × max_seq_len``.
+
+    Allocation is **lazy with worst-case commitment**: admission debits the
+    full ``ceil((prompt + budget) / block_size)`` from a commitment ledger
+    (``can_admit`` checks fresh-worst-case ≤ free − outstanding
+    commitments, so a look-ahead top-up can never fail mid-decode — no
+    preemption needed), but only draws blocks covering the *prompt* from
+    the free list; ``reserve_lookahead`` draws the rest just ahead of the
+    decode scan that will write them. Budget a request never reaches
+    (early EOS, unspent tail) is released without its blocks ever leaving
+    the free list.
 
     Blocks are **refcounted**: requests whose prompts share a full-block
     prefix point their leading table entries at the same physical blocks
     (``prefix_sharing``), skipping both the HBM and the prefill compute for
     those tokens. A prefix-hash index maps ``tokens[:k*bs]`` (full blocks
     only, registered once the owning request's prefill completes) to the
-    pool block holding block ``k-1``. ``free_slot`` decrements; a block
-    returns to the free list — and drops out of the index — at refcount 0.
+    pool block holding block ``k-1``. ``free_slot`` decrements; at
+    refcount 0 an *indexed* block is retained — it keeps its index entry
+    and parks at the LRU tail of the free list, so a later admission
+    (same burst or a new one) can revive it with its K/V intact
+    (cross-run prefix persistence); unindexed blocks return to the plain
+    free list. Reclaim order is plain blocks first, then cached blocks
+    least-recently-freed first; eviction drops the index entry.
     If a new request must *write* inside a shared block (its prompt is
     entirely covered by shared blocks, so the engine recomputes the final
     prompt token for its logits), the allocator schedules a copy-on-write:
@@ -404,7 +455,8 @@ class PagedCache(KVCacheBackend):
 
     def __init__(self, lm, params, *, batch_slots: int, max_seq_len: int,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 proto_len: int = 16, prefix_sharing: bool = True):
+                 proto_len: int = 16, prefix_sharing: bool = True,
+                 retain_prefix_blocks: Optional[bool] = None):
         for stage in lm.cfg.stages:
             for bdef in stage.blocks:
                 if bdef.mixer not in ("attn", "mla"):
@@ -416,6 +468,10 @@ class PagedCache(KVCacheBackend):
         self.max_seq_len = max_seq_len
         self.block_size = block_size
         self.prefix_sharing = prefix_sharing
+        self.retain_prefix_blocks = (prefix_sharing
+                                     if retain_prefix_blocks is None
+                                     else retain_prefix_blocks
+                                     and prefix_sharing)
         self.blocks_per_slot = -(-max_seq_len // block_size)   # table width M
         if num_blocks is None:
             # default to ring-equivalent capacity (+ the trash block)
@@ -424,19 +480,35 @@ class PagedCache(KVCacheBackend):
             raise ValueError("paged pool needs ≥ 2 blocks (block 0 is trash)")
         self.num_blocks = num_blocks
         self._proto = _cache_proto(lm, params, max_seq_len, proto_len)
-        self._free: List[int] = list(range(1, num_blocks))     # 0 = trash
+        # free blocks, two tiers: plain blocks (no cached content) are
+        # reclaimed first; refcount-0 blocks retaining indexed prefix K/V
+        # sit in freed order and are reclaimed LRU-first, i.e. last overall
+        self._free_plain: List[int] = list(range(1, num_blocks))  # 0 = trash
+        self._free_cached: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
         self._slot_blocks: Dict[int, List[int]] = {}
         self._ref: Dict[int, int] = {}                # block -> refcount
         self._index: Dict[bytes, int] = {}            # prefix hash -> block
         self._block_key: Dict[int, bytes] = {}        # reverse index
         self._slot_shared: Dict[int, int] = {}        # slot -> live blocks
         self._slot_start: Dict[int, int] = {}         # slot -> prefill start
+        self._slot_cap: Dict[int, int] = {}           # slot -> max entries
+        self._slot_gap: Dict[int, int] = {}           # committed, not drawn
+        self._gap_total = 0                           # sum of _slot_gap
         self._pending_copies: List = []               # (src, dst) for COW
         # accounting for the bench / capacity planning
         self.admitted = 0
         self.blocks_allocated_total = 0
         self.peak_blocks_in_use = 0
         self.cow_copies = 0
+        self.lookahead_topups = 0
+        self.retained_block_hits = 0
+
+    @property
+    def _free(self) -> List[int]:
+        """All reclaimable blocks, in reclaim order (read-only view kept
+        for accounting/tests; mutate the underlying tiers instead)."""
+        return self._free_plain + list(self._free_cached)
 
     # -- device state --------------------------------------------------------
     def init(self) -> Dict[str, Any]:
@@ -465,12 +537,15 @@ class PagedCache(KVCacheBackend):
         return max(1, -(-(prompt_len + max_new) // self.block_size))
 
     def _plan(self, prompt, max_new: int):
-        """(total_blocks, shared_blocks, fresh_needed, prefill_start) for a
+        """(total_blocks, shared_blocks, fresh_worst, prefill_start) for a
         prospective admission. Sharing matches the longest chain of full
-        prompt blocks already registered in the prefix index; the engine
-        always recomputes at least the final prompt token (its logits seed
-        decode), and when that token's block is shared the plan reserves one
-        extra block for the copy-on-write."""
+        prompt blocks already registered in the prefix index — refcount-0
+        retained blocks included (their K/V survives in the pool until
+        eviction); the engine always recomputes at least the final prompt
+        token (its logits seed decode), and when that token's block is
+        shared the plan commits one extra block for the copy-on-write.
+        ``fresh_worst`` is the worst-case fresh-block draw over the
+        request's whole lifetime (full budget, no early EOS)."""
         length, tokens = _prompt_spec(prompt)
         total = self.blocks_needed(length, max_new)
         shared = []
@@ -490,48 +565,147 @@ class PagedCache(KVCacheBackend):
             cow = 1                            # last block must go private
         return total, shared, total - k + cow, prefill_start
 
+    def _revivals(self, shared) -> int:
+        """Shared blocks currently parked refcount-0 in the free list: a
+        revival takes them out of the free list without counting as a
+        fresh draw."""
+        return sum(1 for blk in shared if blk not in self._ref)
+
+    def _available(self) -> int:
+        """Free blocks not spoken for by outstanding worst-case
+        commitments of already-admitted requests."""
+        return (len(self._free_plain) + len(self._free_cached)
+                - self._gap_total)
+
     def can_admit(self, prompt, max_new: int) -> bool:
-        _, _, fresh, _ = self._plan(prompt, max_new)
-        return fresh <= len(self._free)
+        _, shared, fresh_worst, _ = self._plan(prompt, max_new)
+        return fresh_worst + self._revivals(shared) <= self._available()
+
+    def _take_free(self, n: int, exclude=()) -> List[int]:
+        """Draw ``n`` blocks: plain free blocks first, then retained
+        (cached) blocks least-recently-freed first, evicting their index
+        entries. ``exclude`` protects retained blocks the caller is about
+        to *revive* as shared entries of the same admission — evicting one
+        of those would hand the same physical block out twice. Callers
+        stay within the commitment ledger (which counts revivals), so the
+        free list always covers the draw."""
+        out: List[int] = []
+        while self._free_plain and len(out) < n:
+            out.append(self._free_plain.pop())
+        if len(out) < n:
+            for blk in list(self._free_cached):              # LRU eviction
+                if len(out) >= n:
+                    break
+                if blk in exclude:
+                    continue
+                del self._free_cached[blk]
+                key = self._block_key.pop(blk, None)
+                if key is not None and self._index.get(key) == blk:
+                    del self._index[key]
+                out.append(blk)
+        assert len(out) == n, "commitment ledger violated: free list short"
+        return out
+
+    def _release_block(self, blk: int) -> None:
+        """Park a refcount-0 block in the free list: retained (index entry
+        kept, LRU tail) when it holds registered prefix K/V, plain
+        otherwise."""
+        key = self._block_key.get(blk)
+        if key is not None and self.retain_prefix_blocks:
+            self._free_cached[blk] = None     # most-recent = reclaimed last
+            return
+        if key is not None:
+            del self._block_key[blk]
+            if self._index.get(key) == blk:
+                del self._index[key]
+        self._free_plain.append(blk)
 
     def alloc_slot(self, slot, prompt, max_new) -> np.ndarray:
         length, _ = _prompt_spec(prompt)
-        total, shared, fresh_need, prefill_start = self._plan(prompt, max_new)
-        if fresh_need > len(self._free):
+        total, shared, fresh_worst, prefill_start = self._plan(prompt,
+                                                               max_new)
+        revive = self._revivals(shared)
+        if fresh_worst + revive > self._available():
             raise RuntimeError(
-                f"paged pool exhausted: need {fresh_need} blocks, "
-                f"{len(self._free)} free")
+                f"paged pool exhausted: need {fresh_worst + revive} blocks, "
+                f"{self._available()} available")
         if slot in self._slot_blocks:
             raise RuntimeError(f"slot {slot} already holds blocks")
-        fresh, self._free = (self._free[:fresh_need],
-                             self._free[fresh_need:])
+        k = len(shared)
+        cow = 1 if (shared and prefill_start < k * self.block_size) else 0
+        # physical draw now: blocks covering the prompt (decode blocks are
+        # drawn by reserve_lookahead just ahead of the scan that fills them)
+        entries_now = max(1, -(-length // self.block_size))
+        fresh_now = cow + max(0, entries_now - k)
+        fresh = self._take_free(fresh_now, exclude=set(shared))
         for blk in shared:
+            if blk in self._free_cached:      # revive a retained block
+                del self._free_cached[blk]
+                self.retained_block_hits += 1
             self._ref[blk] = self._ref.get(blk, 0) + 1
         for blk in fresh:
             self._ref[blk] = 1
         blocks = list(shared)
-        if prefill_start < len(shared) * self.block_size:
+        if cow:
             # copy-on-write: the final prompt token lives in the last shared
             # block; hand this slot a private copy instead
             src = blocks[-1]
             dst = fresh[0]
             blocks[-1] = dst
             self._ref[src] -= 1                # undo the share of that block
+            if self._ref[src] == 0:            # was a revived retained block
+                del self._ref[src]
+                self._release_block(src)
             self._pending_copies.append((src, dst))
             self.cow_copies += 1
             blocks.extend(fresh[1:])
         else:
             blocks.extend(fresh)
         self._slot_blocks[slot] = blocks
-        self._slot_shared[slot] = len(shared)   # content-live leading blocks
+        self._slot_shared[slot] = k             # content-live leading blocks
         self._slot_start[slot] = prefill_start
+        self._slot_cap[slot] = total
+        self._slot_gap[slot] = fresh_worst - fresh_now
+        self._gap_total += fresh_worst - fresh_now
         row = np.full((self.blocks_per_slot,), -1, np.int32)
-        row[:total] = blocks
+        row[:len(blocks)] = blocks
         self.admitted += 1
-        self.blocks_allocated_total += fresh_need
+        self.blocks_allocated_total += fresh_now
         self.peak_blocks_in_use = max(self.peak_blocks_in_use,
                                       self.blocks_in_use)
         return row
+
+    def reserve_lookahead(self, slot, tokens: int):
+        """Top the slot's table up to cover ``tokens`` total tokens ahead
+        of a decode scan. Draws at most the slot's remaining commitment
+        (the admission-time worst case), so the ledger guarantees the free
+        list can satisfy it; returns ``(row, previously_covered)`` for the
+        engine's ``begin_slot`` replay, or ``(None, 0)`` when covered."""
+        blocks = self._slot_blocks.get(slot)
+        if blocks is None:
+            return None, 0
+        need = min(max(1, -(-tokens // self.block_size)),
+                   self._slot_cap[slot])
+        have = len(blocks)
+        if need <= have:
+            return None, 0
+        take = need - have
+        assert take <= self._slot_gap[slot], (
+            f"look-ahead past slot {slot}'s committed budget "
+            f"({take} > {self._slot_gap[slot]})")
+        fresh = self._take_free(take)
+        for blk in fresh:
+            self._ref[blk] = 1
+        blocks.extend(fresh)
+        self._slot_gap[slot] -= take
+        self._gap_total -= take
+        self.blocks_allocated_total += take
+        self.lookahead_topups += 1
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        row = np.full((self.blocks_per_slot,), -1, np.int32)
+        row[:len(blocks)] = blocks
+        return row, have
 
     def shared_prefill_start(self, slot: int) -> int:
         return self._slot_start.get(slot, 0)
@@ -578,7 +752,10 @@ class PagedCache(KVCacheBackend):
 
     @property
     def blocks_in_use(self) -> int:
-        return (self.num_blocks - 1) - len(self._free)
+        """Blocks held by live slots (retained refcount-0 cache blocks are
+        reclaimable, so they count as free)."""
+        return (self.num_blocks - 1) - len(self._free_plain) \
+            - len(self._free_cached)
 
     def reset_stats(self) -> None:
         """Zero the admission accounting (e.g. after bench warm-up) so
@@ -587,6 +764,8 @@ class PagedCache(KVCacheBackend):
         self.blocks_allocated_total = 0
         self.peak_blocks_in_use = self.blocks_in_use
         self.cow_copies = 0
+        self.lookahead_topups = 0
+        self.retained_block_hits = 0
 
     def free_slot(self, cache_state, slot):
         blocks = self._slot_blocks.pop(slot, None)
@@ -594,17 +773,44 @@ class PagedCache(KVCacheBackend):
             return cache_state
         self._slot_shared.pop(slot, None)
         self._slot_start.pop(slot, None)
+        self._slot_cap.pop(slot, None)
+        # release the never-drawn commitment (over-reserved look-ahead the
+        # request finished without: early EOS / unspent budget tail)
+        self._gap_total -= self._slot_gap.pop(slot, 0)
         for blk in blocks:
             self._ref[blk] = self._ref.get(blk, 1) - 1
             if self._ref[blk] > 0:
                 continue                      # still shared by another slot
             del self._ref[blk]
-            key = self._block_key.pop(blk, None)
-            if key is not None and self._index.get(key) == blk:
-                del self._index[key]
-            self._free.append(blk)
+            self._release_block(blk)
         tables = cache_state["tables"].at[slot].set(-1)
         return {"caches": cache_state["caches"], "tables": tables}
+
+    def assert_invariants(self) -> None:
+        """Allocator accounting invariants (tests call this after runs and
+        mid-traffic): block conservation across slots/tiers, ledger
+        consistency, and index/retention coherence."""
+        held = [b for blocks in self._slot_blocks.values() for b in blocks]
+        # every non-trash block is either held by exactly the slots that
+        # refcount it, or parked in exactly one free tier
+        assert sorted(held + list(self._free_plain)
+                      + list(self._free_cached)) == sorted(
+            list(range(1, self.num_blocks)) + [
+                b for b, r in self._ref.items() for _ in range(r - 1)])
+        assert all(r > 0 for r in self._ref.values())
+        assert set(self._ref) == set(held)
+        # ledger: outstanding commitments never exceed the free list
+        assert self._gap_total == sum(self._slot_gap.values())
+        assert 0 <= self._gap_total <= (len(self._free_plain)
+                                        + len(self._free_cached))
+        # retention: every cached free block is indexed, and the index's
+        # reverse map agrees
+        for blk in self._free_cached:
+            assert self._block_key.get(blk) is not None
+        for key, blk in self._index.items():
+            assert self._block_key.get(blk) == key
+        for blk, key in self._block_key.items():
+            assert self._index.get(key) == blk
 
     # -- chunked-prefill admission seam --------------------------------------
     def begin_slot(self, cache_state, slot, table_row, shared_blocks):
@@ -692,8 +898,10 @@ class PagedCache(KVCacheBackend):
         return self.block_bytes() * self.num_blocks
 
     def hbm_bytes_per_slot(self) -> float:
-        """Average bytes actually reserved per admitted request (the ring
-        equivalent is a constant ``max_seq_len`` line)."""
+        """Average bytes actually *drawn* per admitted request (the ring
+        equivalent is a constant ``max_seq_len`` line). Lazy allocation
+        makes this live-token-accurate: committed-but-undrawn budget
+        blocks (unreached look-ahead) don't count."""
         if self.admitted == 0:
             return float(self.block_bytes() * self.blocks_per_slot)
         return self.block_bytes() * self.blocks_allocated_total / self.admitted

@@ -23,6 +23,12 @@ def request_keys(base, request_ids, steps) -> jnp.ndarray:
     outputs no longer depend on which requests happen to be co-scheduled in
     the batch (or on how a scheduler interleaved their admission).
 
+    This is also what makes multi-step decode exact for sampled streams:
+    the engine's K-step ``lax.scan`` re-derives each row's key from the
+    *carried* ``steps`` at every scanned iteration, so the keys a K-scan
+    consumes are exactly the ones K single-step rounds would have drawn —
+    no per-step host key splitting, nothing baked at trace time.
+
     base: a PRNGKey; request_ids, steps: (B,) int32. Returns (B, ...) keys.
     """
     def one(rid, step):

@@ -19,6 +19,19 @@ request's time-to-first-token is never starved by later arrivals. With
 (whole-bucket admission), which stays the default; engines *execute*
 scheduler decisions either way — they no longer decide anything.
 
+The scheduler also picks the **decode horizon**: how many fused decode
+steps the engine scans per host sync (``StepPlan.decode_steps``). With
+``max_decode_steps=K`` the engine pays one dispatch and one ``active``-mask
+sync per K generated tokens instead of per token — the dominant residual
+cost on weak hosts once the per-op compute is kernel-bound. The horizon is
+dynamic: it collapses to 1 whenever prefill work is pending or a request
+was just admitted (so chunked-prefill TTFT wins — and every request's
+*first* token — are never delayed by a long scan), and is otherwise capped
+by the smallest remaining per-slot budget headroom (a slot finishing its
+budget mid-scan would occupy its slot as dead weight until the sync).
+Horizons are rounded down to a power-of-two schedule (``k_schedule``) so
+the engine compiles at most ``log2(K)`` scan variants.
+
 Chunking is output-exact: a chunk attends to previously installed chunks
 through the cache layout with ordinary position masking, so the logits at
 the final prompt token — the only ones sampling ever reads — are identical
@@ -89,9 +102,13 @@ class StepPlan:
     """Chunks to execute this step plus admission count. Whether a decode
     round follows is the *engine's* call at execution time: a final chunk
     in this very plan can activate a slot, so any decode flag computed at
-    plan time would already be stale."""
+    plan time would already be stale. ``decode_steps`` is the decode
+    horizon: how many fused decode steps the engine scans before its next
+    host sync (1 unless multi-step decode is enabled and no prefill work
+    is pending)."""
     chunks: Tuple[ChunkTask, ...]
     admitted: int         # requests granted a slot this step
+    decode_steps: int = 1  # fused decode steps per host sync this round
 
 
 def chunk_buckets(chunk_tokens: int, min_bucket: int = 8) -> List[int]:
@@ -107,12 +124,30 @@ class Scheduler:
     Defaults to ``batch_slots + chunk_tokens`` (decodes never crowd out
     prefill entirely, and vice versa). Must exceed ``batch_slots`` so a
     fully decoding engine still advances the head prefill every step.
+
+    ``max_decode_steps`` enables multi-step decode: each pure-decode step
+    may scan up to that many fused decode steps per host sync (see
+    ``StepPlan.decode_steps`` and ``_decode_horizon``).
     """
 
     def __init__(self, *, batch_slots: int, chunk_tokens: Optional[int] = None,
-                 token_budget: Optional[int] = None, min_bucket: int = 8):
+                 token_budget: Optional[int] = None, min_bucket: int = 8,
+                 max_decode_steps: int = 1):
         self.batch_slots = batch_slots
         self.chunk_tokens = chunk_tokens
+        if max_decode_steps < 1:
+            raise ValueError(
+                f"max_decode_steps must be >= 1 (got {max_decode_steps})")
+        self.max_decode_steps = max_decode_steps
+        # horizons the engine may be asked to run (hence must compile):
+        # powers of two up to — and always including — the max
+        ks: List[int] = []
+        k = 1
+        while k < max_decode_steps:
+            ks.append(k)
+            k *= 2
+        ks.append(max_decode_steps)
+        self.k_schedule = ks
         if chunk_tokens is None:
             self.token_budget = None
             self.buckets: List[int] = []
@@ -133,20 +168,40 @@ class Scheduler:
     def chunked(self) -> bool:
         return self.chunk_tokens is not None
 
+    def _decode_horizon(self, busy_prefill: bool,
+                        min_headroom: Optional[int]) -> int:
+        """Fused decode steps for this round. Collapses to 1 while prefill
+        work is pending (or a request was just admitted) so a scan never
+        delays anyone's first token; otherwise the largest schedule entry
+        within the smallest active slot's remaining budget — a slot never
+        finishes its budget mid-scan and then squats on its slot waiting
+        for the sync."""
+        if busy_prefill or self.max_decode_steps == 1:
+            return 1
+        cap = self.max_decode_steps
+        if min_headroom is not None:
+            cap = max(1, min(cap, min_headroom))
+        return max(k for k in self.k_schedule if k <= cap)
+
     # -- the per-step decision ------------------------------------------------
     def plan_step(self, *, n_active: int, prefilling,
-                  try_admit: Callable[[], Any]) -> StepPlan:
+                  try_admit: Callable[[], Any],
+                  min_headroom: Optional[int] = None) -> StepPlan:
         """Compose one step. ``prefilling`` maps slot -> PrefillProgress in
         admission order; ``try_admit`` is the engine's admission effect: it
         grants the queue head a slot (plus cache reservation) and returns
         its PrefillProgress, MONOLITHIC for legacy admissions, or None when
-        nothing further can be admitted. The engine executes the returned
-        chunks in order, then decodes whatever is active."""
+        nothing further can be admitted. ``min_headroom`` is the smallest
+        remaining decode budget across the engine's active slots (None when
+        none are active) — it caps the multi-step decode horizon. The
+        engine executes the returned chunks in order, then scans
+        ``decode_steps`` fused decode rounds over whatever is active."""
         admitted = 0
         if not self.chunked:
             while try_admit() is not None:
                 admitted += 1
-            return StepPlan((), admitted)
+            return StepPlan((), admitted,
+                            self._decode_horizon(admitted > 0, min_headroom))
 
         budget = self.token_budget
         spent = n_active                     # decode tokens this step
@@ -185,4 +240,6 @@ class Scheduler:
             if pp is MONOLITHIC:
                 continue
             spent = plan_for(pp, spent)
-        return StepPlan(tuple(chunks), admitted)
+        busy_prefill = bool(chunks) or bool(prefilling) or admitted > 0
+        return StepPlan(tuple(chunks), admitted,
+                        self._decode_horizon(busy_prefill, min_headroom))

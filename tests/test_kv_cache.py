@@ -56,18 +56,29 @@ def test_allocator_reserves_and_frees():
     assert be.can_admit(20, 8)                        # 28 tokens -> 4 blocks
     row = be.alloc_slot(0, 20, 8)
     assert row.shape == (be.blocks_per_slot,)
-    assert (row[:4] > 0).all() and (row[4:] == -1).all()
-    assert 0 not in row[:4]                           # trash never allocated
-    assert be.blocks_in_use == 4
-    # a second big request no longer fits; a small one does
+    # lazy draw: only the 3 prompt blocks are physical; the 4th (decode
+    # budget) is committed in the ledger and drawn by look-ahead
+    assert (row[:3] > 0).all() and (row[3:] == -1).all()
+    assert 0 not in row[:3]                           # trash never allocated
+    assert be.blocks_in_use == 3
+    # admission is still gated by the worst case: a second big request no
+    # longer fits (committed, not just drawn, blocks count); a small one does
     assert not be.can_admit(25, 8)
     assert be.can_admit(5, 3)
+    # look-ahead tops the table up to cover pos + K and draws the committed
+    # block; a covered ask is a no-op
+    row2, covered = be.reserve_lookahead(0, 20 + 8)
+    assert covered == 3 and (row2[:4] > 0).all() and (row2[4:] == -1).all()
+    assert be.blocks_in_use == 4 and be._slot_gap[0] == 0
+    assert be.reserve_lookahead(0, 20 + 8) == (None, 0)
+    be.assert_invariants()
     state = be.init()
     state = be.free_slot(state, 0)
     assert be.blocks_in_use == 0
     assert be.can_admit(25, 7)
     # freeing an empty slot is a no-op
     assert be.free_slot(state, 0) is state
+    be.assert_invariants()
 
 
 def test_allocator_exhaustion_raises():
@@ -104,15 +115,20 @@ def test_hbm_accounting():
     assert (paged.block_bytes() * paged.blocks_per_slot
             == ring.hbm_bytes_per_slot())
     assert paged.hbm_bytes() == paged.block_bytes() * paged.num_blocks
-    paged.alloc_slot(0, 5, 3)                         # 1 block
-    paged.alloc_slot(1, 20, 8)                        # 4 blocks
+    paged.alloc_slot(0, 5, 3)                         # 1 block drawn
+    paged.alloc_slot(1, 20, 8)                        # 3 prompt blocks drawn
+    # the average counts blocks actually *drawn* (lazy allocation): the
+    # second request's 4th block is committed but not yet physical
+    assert paged.hbm_bytes_per_slot() == paged.block_bytes() * 2.0
+    paged.reserve_lookahead(1, 28)                    # draw the 4th
     assert paged.hbm_bytes_per_slot() == paged.block_bytes() * 2.5
 
 
 def test_prefix_sharing_refcounts_and_index():
     """Full-block prefix sharing at the allocator level: registration,
-    matched shares incrementing refcounts, and refcount-0 reclamation
-    dropping index entries."""
+    matched shares incrementing refcounts, and refcount-0 *retention* —
+    freed prefix blocks keep their index entries and park at the LRU tail
+    of the free list for cross-run revival."""
     lm, params = _lm(_tiny_cfg())
     be = PagedCache(lm, params, batch_slots=4, max_seq_len=64, block_size=8)
     state = be.init()
@@ -132,16 +148,32 @@ def test_prefix_sharing_refcounts_and_index():
     assert be.shared_block_count(1) == 2
     assert be._ref[int(row0[0])] == 2
     assert be.take_pending_copies() == []              # tail diverges: no COW
-    # only the non-shared blocks were newly reserved
-    assert free_before - len(be._free) == be.blocks_needed(len(other), 8) - 2
+    # only the non-shared prompt blocks were newly drawn (lazy allocation:
+    # 23 prompt tokens = 3 entries, 2 of them shared)
+    assert free_before - len(be._free) == 1
 
     # owner leaves first: shared blocks stay live for slot 1
     state = be.free_slot(state, 0)
     assert be._ref[int(row0[0])] == 1
     assert len(be._index) == 2
     state = be.free_slot(state, 1)
-    assert be._ref == {} and be._index == {} and be._block_key == {}
+    # cross-run retention: refcounts drop to zero and every block returns
+    # to the free list, but indexed prefix blocks keep their entries (LRU
+    # tail) so a later matching admission can revive them
+    assert be._ref == {}
+    assert len(be._index) == 2 and len(be._block_key) == 2
     assert sorted(be._free) == list(range(1, be.num_blocks))
+    assert set(be._free_cached) == set(be._block_key)
+    be.assert_invariants()
+
+    # revival: a matching admission shares the retained blocks without
+    # recomputing them; a non-matching one eventually evicts (plain blocks
+    # are reclaimed first, cached blocks LRU-last)
+    row2 = be.alloc_slot(2, prompt, 8)
+    assert list(row2[:2]) == list(row0[:2])
+    assert be.shared_prefill_start(2) == 16
+    assert be.retained_block_hits == 2
+    be.assert_invariants()
 
 
 def test_block_aligned_full_cover_schedules_cow():
@@ -164,9 +196,12 @@ def test_block_aligned_full_cover_schedules_cow():
 
 
 def test_paged_accounting_invariant_after_run():
-    """After any ``run()`` — chunked, shared, starved — every non-reserved
-    block is back in the free list, refcounts and the prefix index are
-    empty, and no slot holds blocks."""
+    """After any ``run()`` — chunked, shared, starved, multi-step — every
+    non-reserved block is back in the free list, refcounts, commitments
+    and slot maps are empty, and retention keeps exactly the registered
+    prefix blocks indexed at the free list's LRU tail (the lazy-reclaim
+    path): the structural ``assert_invariants`` plus the drained-state
+    specifics."""
     lm, params = _lm(_tiny_cfg())
     rng = np.random.default_rng(11)
     template = rng.integers(0, 60, size=8).astype(np.int32)
@@ -175,7 +210,8 @@ def test_paged_accounting_invariant_after_run():
                                   1, 10))).astype(np.int32)]),
               int(rng.integers(2, 7))) for _ in range(6)]
     for kw in ({}, {"chunk_tokens": 4}, {"chunk_tokens": 4,
-                                         "num_pool_blocks": 13}):
+                                         "num_pool_blocks": 13},
+               {"chunk_tokens": 4, "max_decode_steps": 8}):
         eng = ServingEngine(lm, params, batch_slots=3, max_seq_len=32,
                             min_bucket=4, cache_backend="paged",
                             block_size=8, **kw)
@@ -183,12 +219,68 @@ def test_paged_accounting_invariant_after_run():
             eng.submit(prompt, max_new_tokens=max_new)
         eng.run()
         be = eng.backend
+        be.assert_invariants()
         assert be.blocks_in_use == 0, kw
         assert be._slot_blocks == {}, kw
         assert be._ref == {}, kw
-        assert be._index == {} and be._block_key == {}, kw
+        assert be._slot_gap == {} and be._gap_total == 0, kw
+        # every block is reclaimable and the retained ones are exactly the
+        # indexed prefix blocks, parked in the cached tier
         assert sorted(be._free) == list(range(1, be.num_blocks)), kw
+        assert set(be._free_cached) == set(be._block_key), kw
+        assert set(be._index.values()) == set(be._block_key), kw
         assert be.take_pending_copies() == [], kw
+        # retention is an upper bound too: sharing off -> nothing cached
+        if not be.prefix_sharing:
+            assert be._index == {}, kw
+
+
+def test_eviction_never_steals_blocks_being_revived():
+    """Regression: an admission that both *revives* retained shared blocks
+    and must *evict* cached blocks for its fresh draw must not evict the
+    very blocks it is reviving — that would hand the same physical block
+    out twice in one table row."""
+    lm, params = _lm(_tiny_cfg())
+    be = PagedCache(lm, params, batch_slots=2, max_seq_len=32, block_size=8,
+                    num_blocks=5)                      # 4 usable
+    state = be.init()
+    other = np.arange(100, 108, dtype=np.int32)        # 1 block
+    tmpl = np.arange(16, dtype=np.int32)               # 2 blocks
+    be.alloc_slot(0, other, 0)
+    be.register_prefix(0, other)
+    be.alloc_slot(1, tmpl, 0)
+    be.register_prefix(1, tmpl)
+    # free the template *first* so its blocks are LRU-oldest in the cached
+    # tier — exactly the ones naive eviction would reclaim first
+    state = be.free_slot(state, 1)
+    state = be.free_slot(state, 0)
+    assert len(be._free_cached) == 3 and len(be._free_plain) == 1
+    # 32-token prompt: shares (revives) the 2 template blocks, needs 2
+    # fresh — 1 plain + 1 evicted. The eviction must take ``other``'s
+    # block, not a template block being revived.
+    row = be.alloc_slot(0, np.concatenate([tmpl, np.arange(50, 66,
+                                                           dtype=np.int32)]),
+                        0)
+    assert len(set(row[:4].tolist())) == 4             # no duplicate blocks
+    assert be.shared_prefill_start(0) == 16
+    assert other.tobytes() not in be._index            # the evicted entry
+    be.assert_invariants()
+
+
+def test_paged_retention_disabled_reclaims_index():
+    """``retain_prefix_blocks=False`` restores the old reclaim-at-zero
+    behavior: freed blocks drop their index entries immediately."""
+    lm, params = _lm(_tiny_cfg())
+    be = PagedCache(lm, params, batch_slots=2, max_seq_len=32, block_size=8,
+                    retain_prefix_blocks=False)
+    state = be.init()
+    prompt = np.arange(16, dtype=np.int32)
+    be.alloc_slot(0, prompt, 4)
+    be.register_prefix(0, prompt)
+    assert len(be._index) == 2
+    be.free_slot(state, 0)
+    assert be._index == {} and be._block_key == {} and not be._free_cached
+    be.assert_invariants()
 
 
 def test_paged_rejects_recurrent_mixers():

@@ -1,0 +1,297 @@
+"""Multi-step fused decode: the engine scans K decode steps per host sync.
+
+The acceptance contract is *exactness at every K*: greedy and fixed
+``(request_id, step)``-keyed sampled outputs must be token-for-token
+identical to the step-by-step (K = 1) engine on all four cache
+configurations — ring, paged, MLA and windowed-paged — including requests
+that finish mid-scan (EOS or budget) and paged slots whose blocks are
+granted by look-ahead reservation just ahead of each scan."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (MLA, SWIGLU, BlockDef, MLAConfig, ModelConfig,
+                                Stage, dense_stages)
+from repro.models.model import LM
+from repro.serving import ServingEngine
+
+
+def _tiny_cfg(layers=2, window=None):
+    return ModelConfig(
+        name="tiny", family="dense", source="t", num_layers=layers,
+        d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        vocab_size=64, stages=dense_stages(layers, window=window),
+        param_dtype="float32")
+
+
+def _mla_cfg():
+    return ModelConfig(
+        name="tiny-mla", family="mla", source="t", num_layers=2,
+        d_model=32, num_heads=4, num_kv_heads=4, head_dim=8, d_ff=64,
+        vocab_size=64,
+        stages=(Stage(blocks=(BlockDef(mixer=MLA, mlp=SWIGLU),), repeat=2),),
+        param_dtype="float32",
+        mla=MLAConfig(q_lora_rank=16, kv_lora_rank=8, qk_nope_head_dim=8,
+                      qk_rope_head_dim=4, v_head_dim=8))
+
+
+def _lm(cfg):
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    return lm, params
+
+
+def _mixed_trace(n=6, seed=1, budgets=(3, 12)):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 60, size=int(rng.integers(3, 12))),
+             int(rng.integers(*budgets))) for _ in range(n)]
+
+
+def _run(lm, params, trace, temperature=0.0, **kw):
+    eng = ServingEngine(lm, params, max_seq_len=32, min_bucket=4, **kw)
+    for prompt, max_new in trace:
+        eng.submit(prompt, max_new_tokens=max_new, temperature=temperature)
+    return eng, {rid: r.output for rid, r in eng.run().items()}
+
+
+def _assert_same(a, b):
+    assert set(a) == set(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid], b[rid])
+
+
+K_SWEEP = (1, 2, 7, 32)
+
+CONFIGS = {
+    "ring": (_tiny_cfg, {}),
+    "paged": (_tiny_cfg, dict(cache_backend="paged", block_size=8)),
+    "mla": (_mla_cfg, dict(cache_backend="paged", block_size=8)),
+    "windowed_paged": (lambda: _tiny_cfg(window=8),
+                       dict(cache_backend="paged", block_size=8)),
+}
+
+
+# ---------------------------------------------------------------------------
+# K-sweep equivalence: the acceptance contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_k_sweep_matches_step_by_step_greedy(name):
+    cfg_fn, kw = CONFIGS[name]
+    lm, params = _lm(cfg_fn())
+    trace = _mixed_trace(n=6, seed=2)
+    base_eng, base = _run(lm, params, trace, batch_slots=3, **kw)
+    for k in K_SWEEP[1:]:
+        eng, out = _run(lm, params, trace, batch_slots=3,
+                        max_decode_steps=k, **kw)
+        _assert_same(base, out)
+        # the whole point: fewer host syncs for the same tokens
+        assert eng.host_syncs < base_eng.host_syncs, k
+        if hasattr(eng.backend, "assert_invariants"):
+            eng.backend.assert_invariants()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ("ring", "paged"))
+def test_k_sweep_matches_step_by_step_sampled(name):
+    """temperature > 0: keys fold the carried (request_id, step), so a
+    K-scan consumes exactly the keys K single-step rounds would."""
+    cfg_fn, kw = CONFIGS[name]
+    lm, params = _lm(cfg_fn())
+    trace = _mixed_trace(n=6, seed=3)
+    _, base = _run(lm, params, trace, temperature=0.8, batch_slots=3, **kw)
+    for k in K_SWEEP[1:]:
+        _, out = _run(lm, params, trace, temperature=0.8, batch_slots=3,
+                      max_decode_steps=k, **kw)
+        _assert_same(base, out)
+
+
+@pytest.mark.slow
+def test_k_sweep_with_chunked_prefill_and_sharing():
+    """Multi-step decode composes with the token-budget scheduler: the
+    horizon collapses to 1 while chunks are pending, then scales back up —
+    outputs still match the unchunked K=1 engine, shared prefixes and all."""
+    lm, params = _lm(_tiny_cfg())
+    rng = np.random.default_rng(4)
+    template = rng.integers(0, 60, size=16).astype(np.int32)
+    trace = [(np.concatenate([template, rng.integers(0, 60, size=int(
+        rng.integers(1, 8))).astype(np.int32)]), int(rng.integers(3, 9)))
+        for _ in range(5)]
+    _, base = _run(lm, params, trace, batch_slots=3)
+    for k in (2, 32):
+        eng, out = _run(lm, params, trace, batch_slots=3, chunk_tokens=8,
+                        cache_backend="paged", block_size=8,
+                        max_decode_steps=k)
+        _assert_same(base, out)
+        eng.backend.assert_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Mid-scan completion
+# ---------------------------------------------------------------------------
+
+def test_eos_mid_scan_stops_exactly():
+    """A request hitting EOS *inside* a scan goes inactive on device and
+    no-ops through the remaining iterations: output is cut at the EOS
+    token, the cache takes no junk writes, and the slot frees at the
+    sync."""
+    lm, params = _lm(_tiny_cfg())
+    probe = ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                          min_bucket=4)
+    probe.submit(np.arange(5), max_new_tokens=8)
+    greedy = probe.run()[0].output
+    # EOS = the third greedy token: the first round after admission is a
+    # collapsed k=1 (freshness), so this EOS lands mid-way through the
+    # *second* round's multi-step scan
+    eos = int(greedy[2])
+    expect = list(greedy[:list(greedy).index(eos) + 1])
+    for kw in ({}, dict(cache_backend="paged", block_size=8)):
+        eng = ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                            min_bucket=4, eos_id=eos, max_decode_steps=8,
+                            **kw)
+        eng.submit(np.arange(5), max_new_tokens=8)
+        out = eng.run()[0].output
+        assert list(out) == expect
+        assert eng.host_syncs <= 2           # k=1 arming round + one scan
+
+
+def test_budget_exhaustion_mid_scan():
+    """Mixed budgets inside one scan: the horizon is capped by the
+    *smallest* headroom, so larger-budget slots keep scanning across
+    rounds while small ones finish exactly at their budget."""
+    lm, params = _lm(_tiny_cfg())
+    eng = ServingEngine(lm, params, batch_slots=3, max_seq_len=32,
+                        min_bucket=4, max_decode_steps=8)
+    base = ServingEngine(lm, params, batch_slots=3, max_seq_len=32,
+                         min_bucket=4)
+    for e in (eng, base):
+        e.submit(np.arange(4), max_new_tokens=3)
+        e.submit(np.arange(6), max_new_tokens=8)
+        e.submit(np.arange(2), max_new_tokens=5)
+    done, ref = eng.run(), base.run()
+    for rid, r in ref.items():
+        assert len(done[rid].output) == len(r.output)
+        np.testing.assert_array_equal(done[rid].output, r.output)
+    assert eng.host_syncs < base.host_syncs
+
+
+# ---------------------------------------------------------------------------
+# Paged look-ahead reservation
+# ---------------------------------------------------------------------------
+
+def test_lookahead_reservation_returns_unused_blocks():
+    """Early EOS leaves committed budget blocks undrawn, and whatever was
+    drawn returns at completion: the free list is full after the run and
+    the total draw is below the eager worst case."""
+    lm, params = _lm(_tiny_cfg())
+    probe = ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                          min_bucket=4)
+    probe.submit(np.arange(5), max_new_tokens=1)
+    eos = int(probe.run()[0].output[0])
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        eos_id=eos, max_decode_steps=8)
+    trace = [(np.arange(5), 24), (np.arange(7), 24)]
+    worst = sum(eng.backend.blocks_needed(len(p), mn) for p, mn in trace)
+    for prompt, max_new in trace:
+        eng.submit(prompt, max_new_tokens=max_new)
+    eng.run()
+    be = eng.backend
+    assert be.blocks_allocated_total < worst          # budget tail undrawn
+    assert be.blocks_in_use == 0                      # drawn blocks returned
+    assert sorted(be._free) == list(range(1, be.num_blocks))
+    assert be._gap_total == 0                         # commitments released
+    be.assert_invariants()
+
+
+def test_lookahead_covers_exactly_the_scan():
+    """Block draws track the decode frontier: a long-budget request draws
+    blocks as its scans reach them, never all upfront."""
+    lm, params = _lm(_tiny_cfg())
+    eng = ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        max_decode_steps=4)
+    eng.submit(np.arange(4), max_new_tokens=20)       # 3 blocks worst-case
+    eng.step()                                        # admission (+ arming)
+    be = eng.backend
+    assert be.blocks_allocated_total == 1             # prompt block only
+    while eng.pending:
+        eng.step()
+    assert be.blocks_allocated_total == 3             # drawn by look-ahead
+    assert be.lookahead_topups >= 2
+    be.assert_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Cross-run prefix retention (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_survives_across_runs():
+    """Templated traffic shares across *bursts*: after the engine fully
+    drains, a later run with the same template revives the retained
+    blocks instead of recomputing the prefix."""
+    lm, params = _lm(_tiny_cfg())
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        chunk_tokens=8, max_decode_steps=4)
+    template = np.arange(16, dtype=np.int32)
+    eng.submit(template, max_new_tokens=4)
+    eng.run()                                         # burst 1 drains fully
+    assert eng.prefill_tokens_skipped == 0
+    assert len(eng.backend._index) == 2
+    eng.submit(np.concatenate([template, np.array([3, 4], np.int32)]),
+               max_new_tokens=4)
+    eng.run()                                         # burst 2, much later
+    assert eng.prefill_tokens_skipped == 16           # whole template shared
+    assert eng.backend.retained_block_hits == 2
+    eng.backend.assert_invariants()
+
+
+def test_retained_blocks_are_reclaimed_lru_last():
+    """Retention never blocks allocation: when fresh traffic needs the
+    whole pool, cached blocks are evicted (plain first, then LRU) and the
+    run proceeds as if retention were off."""
+    lm, params = _lm(_tiny_cfg())
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        chunk_tokens=8, num_pool_blocks=7,  # 6 usable
+                        max_decode_steps=4)
+    template = np.arange(16, dtype=np.int32)
+    eng.submit(template, max_new_tokens=4)
+    eng.run()
+    assert len(eng.backend._free_cached) == 2
+    rng = np.random.default_rng(5)
+    outs = {}
+    for _ in range(3):                                # 3 x 3 blocks > pool
+        rid = eng.submit(rng.integers(0, 60, size=20), max_new_tokens=4)
+        outs[rid] = None
+    done = eng.run()
+    assert set(done) == set(outs)
+    eng.backend.assert_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Warm compile
+# ---------------------------------------------------------------------------
+
+def test_warm_compile_covers_scan_horizons():
+    """``warm_compile`` pre-runs every horizon in the K schedule (and the
+    single step) without observable effect: the same trace then produces
+    identical outputs with zero new decode compiles mid-traffic."""
+    lm, params = _lm(_tiny_cfg())
+    trace = _mixed_trace(n=4, seed=6)
+    _, base = _run(lm, params, trace, batch_slots=2, max_decode_steps=8)
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                        min_bucket=4, max_decode_steps=8,
+                        cache_backend="paged", block_size=8,
+                        chunk_tokens=8)
+    eng.warm_compile()
+    compiles_after_warm = eng._scan_fn._cache_size()
+    assert compiles_after_warm == len(
+        [k for k in eng.scheduler.k_schedule if k > 1])
+    for prompt, max_new in trace:
+        eng.submit(prompt, max_new_tokens=max_new)
+    out = {rid: r.output for rid, r in eng.run().items()}
+    _assert_same(base, out)
+    assert eng._scan_fn._cache_size() == compiles_after_warm

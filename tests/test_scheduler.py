@@ -148,6 +148,73 @@ def test_chunk_buckets_cover_chunk_range():
 
 
 # ---------------------------------------------------------------------------
+# Multi-step decode horizon (plan arithmetic)
+# ---------------------------------------------------------------------------
+
+def test_decode_horizon_defaults_to_one():
+    s = Scheduler(batch_slots=2, chunk_tokens=8)
+    plan = s.plan_step(n_active=2, prefilling=collections.OrderedDict(),
+                       try_admit=lambda: None)
+    assert plan.decode_steps == 1
+
+
+def test_decode_horizon_schedule_and_headroom_cap():
+    s = Scheduler(batch_slots=2, chunk_tokens=8, max_decode_steps=32)
+    assert s.k_schedule == [1, 2, 4, 8, 16, 32]
+    none = collections.OrderedDict()
+
+    def plan(headroom):
+        return s.plan_step(n_active=2, prefilling=none,
+                           try_admit=lambda: None, min_headroom=headroom)
+
+    # unconstrained -> the full horizon; headroom caps it; non-power-of-two
+    # headroom rounds *down* to a compiled schedule entry
+    assert plan(None).decode_steps == 32
+    assert plan(50).decode_steps == 32
+    assert plan(8).decode_steps == 8
+    assert plan(7).decode_steps == 4
+    assert plan(1).decode_steps == 1
+    assert plan(0).decode_steps == 1          # budget-0 slot: still sane
+    # a non-power-of-two max is itself in the schedule
+    s7 = Scheduler(batch_slots=2, max_decode_steps=7)
+    assert s7.k_schedule == [1, 2, 4, 7]
+    assert s7.plan_step(n_active=1, prefilling=none,
+                        try_admit=lambda: None,
+                        min_headroom=20).decode_steps == 7
+
+
+def test_decode_horizon_collapses_under_prefill_work():
+    s = Scheduler(batch_slots=2, chunk_tokens=8, max_decode_steps=16)
+    # pending prefill (chunks will be planned) -> collapse to 1
+    prefilling = collections.OrderedDict([(0, _pp(0, 0, 20))])
+    plan = s.plan_step(n_active=1, prefilling=prefilling,
+                       try_admit=lambda: None, min_headroom=16)
+    assert plan.chunks and plan.decode_steps == 1
+    # a fresh admission this step -> collapse (its first token must not
+    # wait out a long scan); chunked and legacy admissions alike
+    admitted = [_pp(1, 0, 6)]
+    plan = s.plan_step(n_active=1, prefilling=collections.OrderedDict(),
+                       try_admit=lambda: admitted.pop() if admitted
+                       else None, min_headroom=16)
+    assert plan.admitted == 1 and plan.decode_steps == 1
+    legacy = Scheduler(batch_slots=2, max_decode_steps=16)
+    grants = [MONOLITHIC]
+    plan = legacy.plan_step(n_active=1, prefilling=collections.OrderedDict(),
+                            try_admit=lambda: grants.pop() if grants
+                            else None, min_headroom=16)
+    assert plan.admitted == 1 and plan.decode_steps == 1
+    # nothing pending -> full horizon again
+    plan = legacy.plan_step(n_active=1, prefilling=collections.OrderedDict(),
+                            try_admit=lambda: None, min_headroom=16)
+    assert plan.decode_steps == 16
+
+
+def test_scheduler_rejects_bad_max_decode_steps():
+    with pytest.raises(ValueError, match="max_decode_steps"):
+        Scheduler(batch_slots=2, max_decode_steps=0)
+
+
+# ---------------------------------------------------------------------------
 # Engine-level exactness: the acceptance contract
 # ---------------------------------------------------------------------------
 
@@ -254,11 +321,14 @@ def test_shared_prefix_exact_and_skips_prefill():
     assert eng.prefill_tokens_skipped < eng.prefill_tokens_total
     be = eng.backend
     assert be.cow_copies >= 1               # the exact-template admission
-    # accounting invariant: everything returned, refcounts all zero
+    # accounting invariant: everything returned, refcounts all zero; the
+    # template's blocks are *retained* (indexed, LRU tail of the free
+    # list) for cross-run sharing rather than dropped at refcount 0
     assert be.blocks_in_use == 0
     assert be._ref == {}
-    assert be._index == {}
+    assert set(be._index.values()) == set(be._free_cached)
     assert sorted(be._free) == list(range(1, be.num_blocks))
+    be.assert_invariants()
 
 
 @pytest.mark.slow
