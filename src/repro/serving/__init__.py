@@ -7,13 +7,13 @@ from repro.serving.sampler import (request_keys, sample_logits,
                                    sample_logits_batch, sample_logits_keyed)
 from repro.serving.scheduler import (ChunkTask, PrefillProgress, Scheduler,
                                      StepPlan, bucket_for, chunk_buckets,
-                                     prompt_buckets)
+                                     prompt_buckets, request_rank)
 
 __all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
            "CascadeServingEngine", "sample_logits", "sample_logits_batch",
            "sample_logits_keyed", "request_keys",
            "prompt_buckets", "bucket_for", "chunk_buckets",
            "validate_prompt", "Scheduler", "StepPlan", "ChunkTask",
-           "PrefillProgress",
+           "PrefillProgress", "request_rank",
            "KVCacheBackend", "RingCache", "PagedCache", "RingLayout",
            "PagedLayout", "RING", "make_backend"]

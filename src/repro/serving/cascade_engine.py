@@ -72,6 +72,9 @@ class CascadeRequest:
     prompt: np.ndarray
     route: str = ""                  # accept | escalate | drop
     conf: float = 0.0
+    priority: int = 0                # SLO class, forwarded to the routed engine
+    deadline_s: Optional[float] = None   # relative to *cascade* submit time
+    submit_s: float = 0.0
     output: Optional[np.ndarray] = None
     latency_s: float = 0.0
 
@@ -135,7 +138,8 @@ class CascadeServingEngine:
         self._next_id = 0
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               temperature: float = 0.0) -> int:
+               temperature: float = 0.0, priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         from repro.serving.engine import validate_prompt
         # validate here (not at gate time): the gate prefills through the
         # same buckets, so an over-long prompt must fail fast with the
@@ -144,10 +148,22 @@ class CascadeServingEngine:
                                  self.truncate_prompts)
         rid = self._next_id
         self._next_id += 1
-        r = CascadeRequest(rid, prompt)
+        r = CascadeRequest(rid, prompt, priority=priority,
+                           deadline_s=deadline_s)
+        r.submit_s = time.perf_counter()
         r._gen = (max_new_tokens, temperature)
         self._requests.append(r)
         return rid
+
+    def _inner_deadline(self, r: CascadeRequest) -> Optional[float]:
+        """Deadline for the routed engine, shrunk by the time the request
+        already spent queued at the gate: the inner engine stamps its own
+        submit time, so forwarding the raw relative deadline would extend
+        the SLO by the gate delay. May go negative — EDF then simply ranks
+        the already-late request first in its class."""
+        if r.deadline_s is None:
+            return None
+        return r.deadline_s - (time.perf_counter() - r.submit_s)
 
     def run(self) -> Dict[int, CascadeRequest]:
         """Gate every pending request, generate on the routed engine."""
@@ -174,11 +190,14 @@ class CascadeServingEngine:
                 # token ids up + generated ids down (cf. serve_step)
                 m.wan_bytes += len(r.prompt) * 4 + max_new * 4
                 cloud_ids[self.cloud_engine.submit(
-                    r.prompt, max_new, temp)] = r
+                    r.prompt, max_new, temp, priority=r.priority,
+                    deadline_s=self._inner_deadline(r))] = r
             elif code == int(ACCEPT):
                 r.route = "accept"
                 m.accepted += 1
-                edge_ids[self.edge_engine.submit(r.prompt, max_new, temp)] = r
+                edge_ids[self.edge_engine.submit(
+                    r.prompt, max_new, temp, priority=r.priority,
+                    deadline_s=self._inner_deadline(r))] = r
             else:
                 r.route = "drop"
                 m.dropped += 1

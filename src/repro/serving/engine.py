@@ -54,6 +54,21 @@ Sampling keys are derived per request (``request_id`` × decode step), so
 temperature > 0 outputs are a pure function of the request: co-scheduling,
 admission order and chunking never change a sampled stream.
 
+Scheduling is **SLO-aware**: ``submit`` takes a priority class and an
+optional relative deadline, the scheduler serves classes strictly
+(class, then earliest deadline, then FIFO — see
+``scheduler.request_rank``), and when a higher-class request is blocked on
+resources the engine **preempts** the worst-ranked active slot: its decode
+state (generated tokens, step counter, next-sample logits) is
+checkpointed on the host, its cache is swapped out
+(``PagedCache.swap_out`` returns the blocks to the pool) or simply freed
+(ring — the K/V is rebuilt at resume by re-prefilling prompt + generated
+tokens), and the request re-enters the queue to resume later
+**token-for-token** (sampling keys fold the restored step counter; the
+saved logits make the first resumed token bit-exact). First-admission
+timing is sticky across preemption, so ``admit_s``/``ttft_s`` keep
+measuring the request's real service experience.
+
 ``DrainBatchEngine`` preserves the previous drain-the-queue batcher (pad
 the batch to its longest prompt, run everyone for the longest budget,
 round-trip logits to the host each token) as the measured baseline for
@@ -75,7 +90,8 @@ from repro.serving.kv_cache import RingLayout, make_backend
 from repro.serving.sampler import (request_keys, sample_logits_batch,
                                    sample_logits_keyed)
 from repro.serving.scheduler import (MONOLITHIC, PrefillProgress, Scheduler,
-                                     bucket_for, prompt_buckets)
+                                     bucket_for, prompt_buckets,
+                                     request_rank)
 
 
 @dataclasses.dataclass
@@ -84,12 +100,34 @@ class Request:
     prompt: np.ndarray           # (S_prompt,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
+    priority: int = 0            # SLO class: higher = more critical
+    deadline_s: Optional[float] = None   # relative SLO deadline (from submit)
     output: Optional[np.ndarray] = None
     submit_s: float = 0.0        # wall-clock at submit()
-    admit_s: float = 0.0         # wall-clock when a slot was granted
+    admit_s: float = 0.0         # wall-clock at *first* slot grant (sticky:
+    #                              preempt/resume never restamps it)
     finish_s: float = 0.0        # wall-clock at completion
     latency_s: float = 0.0       # finish - submit (queue + service)
     ttft_s: float = 0.0          # submit -> first generated token exists
+    preemptions: int = 0         # times swapped out under SLO pressure
+    resume: Optional["_ResumeState"] = dataclasses.field(
+        default=None, repr=False)     # checkpoint while preempted
+
+
+@dataclasses.dataclass
+class _ResumeState:
+    """Everything a preempted request needs to resume token-for-token:
+    the host-side decode checkpoint (generated tokens, step count, the
+    logits the next sample reads) plus, on the swap path, the backend's
+    opaque K/V checkpoint. ``kv`` is None on the recompute path — the
+    engine rebuilds the cache by re-prefilling prompt + generated tokens
+    (position-masked attention makes the rebuilt K/V identical, and the
+    saved ``last`` logits are restored verbatim, so the next sampled token
+    is bit-exact either way)."""
+    steps: int
+    tokens: np.ndarray           # (steps,) generated so far
+    last: np.ndarray             # (V,) f32 logits to sample the next token
+    kv: Optional[object] = None  # PagedCache.swap_out checkpoint
 
 
 def _next_pow2(n: int) -> int:
@@ -141,7 +179,8 @@ class ServingEngine:
                  chunk_tokens: Optional[int] = None,
                  token_budget: Optional[int] = None,
                  prefix_sharing: bool = True,
-                 max_decode_steps: int = 1):
+                 max_decode_steps: int = 1,
+                 preempt_mode: str = "auto"):
         if lm.cfg.frontend.kind == "audio":
             raise NotImplementedError("engine serves text-token streams")
         self.lm = lm
@@ -179,6 +218,11 @@ class ServingEngine:
         # scheduled-vs-useful token-slot accounting (see ``occupancy``)
         self.planned_token_slots = 0
         self.useful_prefill_tokens = 0
+        # SLO scheduling: engine-level preemption count (per-request counts
+        # live on ``Request.preemptions``) and look-ahead reservation
+        # dispatch count (coalesced: one per decode round with top-ups)
+        self.preemptions = 0
+        self.lookahead_dispatches = 0
 
         if chunk_tokens is not None:
             self._validate_chunk_mixers(chunk_tokens)
@@ -221,8 +265,23 @@ class ServingEngine:
         self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1, 2),
                                  static_argnums=(12,))   # per (bucket, ctx)
         self._begin_fn = jax.jit(self.backend.begin_slot, donate_argnums=0)
+        if hasattr(self.backend, "begin_slots"):
+            # coalesced look-ahead reservation: one device update for every
+            # slot crossing a block boundary in the same plan (inputs are
+            # padded to batch_slots, so this compiles exactly once)
+            self._begin_many_fn = jax.jit(self.backend.begin_slots,
+                                          donate_argnums=0)
         if hasattr(self.backend, "copy_block"):
             self._copy_fn = jax.jit(self.backend.copy_block, donate_argnums=0)
+        if preempt_mode not in ("auto", "swap", "recompute"):
+            raise ValueError(f"preempt_mode must be 'auto', 'swap' or "
+                             f"'recompute' (got {preempt_mode!r})")
+        if preempt_mode == "swap" and not hasattr(self.backend, "swap_out"):
+            raise ValueError(
+                "preempt_mode='swap' needs a backend with swap_out/swap_in "
+                "(paged); the ring backend resumes by recompute")
+        self._preempt_swap = (preempt_mode in ("auto", "swap")
+                              and hasattr(self.backend, "swap_out"))
 
     def _validate_chunk_mixers(self, chunk_tokens: int) -> None:
         if not (1 <= chunk_tokens <= self.max_seq_len):
@@ -248,12 +307,19 @@ class ServingEngine:
 
     # -- queue API ------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               temperature: float = 0.0) -> int:
+               temperature: float = 0.0, priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a request. ``priority`` is its SLO class (higher = more
+        latency-critical: admitted first, given chunk budget first, and
+        never preempted by a lower class); ``deadline_s`` orders within a
+        class (earliest deadline first, relative to submit time). Both
+        default to the old FIFO behavior."""
         prompt = validate_prompt(prompt, max_new_tokens, self.max_seq_len,
                                  self.truncate_prompts)
         rid = self._next_id
         self._next_id += 1
-        r = Request(rid, prompt, max_new_tokens, temperature)
+        r = Request(rid, prompt, max_new_tokens, temperature,
+                    priority=priority, deadline_s=deadline_s)
         r.submit_s = time.perf_counter()
         self._queue.append(r)
         return rid
@@ -289,6 +355,17 @@ class ServingEngine:
             # copying the trash block onto itself is a no-op by definition
             self._cache_state = self._copy_fn(self._cache_state,
                                               jnp.int32(0), jnp.int32(0))
+        if hasattr(self, "_begin_many_fn"):
+            # all-(-1) rows with covered 0 wipe nothing, and an idle
+            # engine's slot-0 table row is already -1: a pure no-op
+            b, m = self.batch_slots, self.backend.blocks_per_slot
+            self._cache_state = self._begin_many_fn(
+                self._cache_state, jnp.zeros((b,), jnp.int32),
+                jnp.full((b, m), -1, jnp.int32), jnp.zeros((b,), jnp.int32))
+        if self._preempt_swap and hasattr(self.backend, "warm_swap"):
+            # a first preemption mid-traffic must not pay the swap
+            # gather/scatter compiles
+            self._cache_state = self.backend.warm_swap(self._cache_state)
         # decode executables: the single step plus every scan horizon the
         # scheduler may pick, so first-request latency never pays scan
         # compilation (all slots inactive -> the run is a pure no-op)
@@ -317,16 +394,21 @@ class ServingEngine:
         plan = self.scheduler.plan_step(
             n_active=len(slots), prefilling=prefilling,
             try_admit=lambda: self._try_admit(slots, free, prefilling),
-            min_headroom=min_headroom)
+            min_headroom=min_headroom,
+            try_preempt=lambda: self._try_preempt(slots))
         for c in plan.chunks:
             self._run_chunk(c, prefilling, slots)
-        if slots:
+        # occupancy peak counts prefill-only steps too: a step where every
+        # live request is still prefilling used to be invisible here
+        if slots or prefilling:
             self.peak_active_slots = max(self.peak_active_slots,
                                          len(slots) + len(prefilling))
+        if slots:
             self._decode_round(slots, free, self._done, plan.decode_steps)
         elif not plan.chunks and not prefilling and self._queue:
-            # nothing running and the head of the queue can never fit
-            nxt = self._queue[0]
+            # nothing running and the best-ranked waiting request can
+            # never fit
+            nxt = min(self._queue, key=request_rank)
             raise RuntimeError(
                 f"request {nxt.request_id} (prompt {len(nxt.prompt)} + "
                 f"budget {nxt.max_new_tokens}) needs more KV blocks than "
@@ -452,22 +534,44 @@ class ServingEngine:
 
     # -- host-side management -------------------------------------------------
     def _try_admit(self, slots, free, prefilling):
-        """Scheduler admission callback: grant the queue head a slot plus
-        its cache reservation, or return None. Chunked admissions return a
-        ``PrefillProgress`` (the scheduler plans their chunks); legacy
-        admissions run the monolithic prefill here and return MONOLITHIC."""
+        """Scheduler admission callback: grant the *best-ranked* waiting
+        request (class, then deadline, then submission order) a slot plus
+        its cache reservation, or return None. Ordering is strict — a
+        lower-class request never backfills in front of a blocked
+        higher-class one, because its blocks could stall the critical
+        request for a whole generation. Chunked admissions return a
+        ``PrefillProgress`` (the scheduler plans their chunks); legacy,
+        swap-resumed and recompute-resumed-monolithic admissions return
+        MONOLITHIC (nothing left to chunk)."""
         if not free or not self._queue:
             return None
-        r = self._queue[0]
-        key = r.prompt if self._admit_with_tokens else len(r.prompt)
-        if not self.backend.can_admit(key, r.max_new_tokens):
+        r = min(self._queue, key=request_rank)
+        if r.resume is not None and r.resume.kv is not None:
+            # swap path: restore the checkpointed blocks, no prefill at all
+            if not self.backend.can_resume(len(r.prompt), r.max_new_tokens):
+                return None
+            self._queue.remove(r)
+            slot = free.pop()
+            self._cache_state = self.backend.swap_in(
+                self._cache_state, slot, r.resume.kv, len(r.prompt),
+                r.max_new_tokens)
+            self._arm_resumed(r, slot, slots)
+            return MONOLITHIC
+        # fresh admission, or recompute-resume (re-prefill prompt + already
+        # generated tokens; the decode checkpoint is restored at arming)
+        tokens = r.prompt if r.resume is None else np.concatenate(
+            [r.prompt, r.resume.tokens]).astype(np.int32)
+        remaining = r.max_new_tokens - (r.resume.steps if r.resume else 0)
+        key = tokens if (self._admit_with_tokens and r.resume is None) \
+            else len(tokens)
+        if not self.backend.can_admit(key, remaining):
             return None
-        self._queue.pop(0)
+        self._queue.remove(r)
         slot = free.pop()
         if not self.scheduler.chunked:
-            self._admit(r, slot, slots)
+            self._admit(r, slot, slots, tokens, remaining)
             return MONOLITHIC
-        table_row = self.backend.alloc_slot(slot, key, r.max_new_tokens)
+        table_row = self.backend.alloc_slot(slot, key, remaining)
         start = self.backend.shared_prefill_start(slot)
         shared_blocks = self.backend.shared_block_count(slot)
         for src, dst in self.backend.take_pending_copies():
@@ -476,72 +580,212 @@ class ServingEngine:
         self._cache_state = self._begin_fn(
             self._cache_state, jnp.int32(slot), jnp.asarray(table_row),
             jnp.int32(shared_blocks))
-        r.admit_s = time.perf_counter()
-        self.prefill_tokens_total += len(r.prompt)
+        if r.admit_s == 0.0:               # sticky: resume never restamps
+            r.admit_s = time.perf_counter()
+        self.prefill_tokens_total += len(tokens)
         self.prefill_tokens_skipped += start
         pp = PrefillProgress(request=r, slot=slot, next=start,
-                             total=len(r.prompt))
+                             total=len(tokens),
+                             tokens=tokens if r.resume is not None else None)
         prefilling[slot] = pp
         return pp
 
     def _run_chunk(self, c, prefilling, slots):
         pp = prefilling[c.slot]
         r = pp.request
+        src = pp.tokens if pp.tokens is not None else r.prompt
         self.planned_token_slots += c.bucket
         self.useful_prefill_tokens += c.length
         tokens = np.zeros((1, c.bucket), np.int32)
-        tokens[0, :c.length] = r.prompt[c.start:c.start + c.length]
+        tokens[0, :c.length] = src[c.start:c.start + c.length]
         # static context bound: next power of two covering the padded chunk
         # end (bounded retrace set: |chunk buckets| x |context buckets|)
         ctx = min(self.max_seq_len, _next_pow2(c.start + c.bucket))
         self._cache_state, self._state = self._chunk_fn(
             self.params, self._cache_state, self._state, jnp.asarray(tokens),
             jnp.int32(c.start), jnp.int32(c.length), jnp.int32(c.slot),
-            jnp.int32(len(r.prompt)), jnp.int32(r.max_new_tokens),
+            jnp.int32(len(src)), jnp.int32(r.max_new_tokens),
             jnp.float32(r.temperature), jnp.int32(r.request_id),
             jnp.bool_(c.final), ctx)
         pp.next = c.start + c.length
         if c.final:
             del prefilling[c.slot]
-            # the slot's full prompt blocks now hold real K/V: publish them
-            # for prefix sharing by later admissions
-            self.backend.register_prefix(c.slot, r.prompt)
-            self._scanned[c.slot] = 0
+            if r.resume is None:
+                # the slot's full prompt blocks now hold real K/V: publish
+                # them for prefix sharing by later admissions (a resumed
+                # request's token stream includes generated tokens — never
+                # published as a "prompt")
+                self.backend.register_prefix(c.slot, r.prompt)
+                self._scanned[c.slot] = 0
+            else:
+                self._restore_checkpoint(r, c.slot)
             slots[c.slot] = r
 
-    def _admit(self, r: Request, slot: int, slots: Dict[int, Request]):
-        length = len(r.prompt)
+    def _admit(self, r: Request, slot: int, slots: Dict[int, Request],
+               tokens_1d: np.ndarray, remaining: int):
+        """Monolithic (unchunked) admission: prefill ``tokens_1d`` — the
+        prompt, or prompt + generated for a recompute-resume — into the
+        slot and arm it for decode. ``remaining`` sizes the cache
+        reservation (decode tokens still to come)."""
+        length = len(tokens_1d)
         bucket = bucket_for(length, self.buckets)
         tokens = np.zeros((1, bucket), np.int32)
-        tokens[0, :length] = r.prompt                    # right-pad (exact)
-        table_row = self.backend.alloc_slot(slot, length, r.max_new_tokens)
+        tokens[0, :length] = tokens_1d                   # right-pad (exact)
+        table_row = self.backend.alloc_slot(slot, length, remaining)
         self._cache_state, self._state = self._admit_fn(
             self.params, self._cache_state, self._state, jnp.asarray(tokens),
             jnp.int32(length), jnp.int32(slot), jnp.int32(r.max_new_tokens),
             jnp.float32(r.temperature), jnp.int32(r.request_id),
             jnp.asarray(table_row))
-        r.admit_s = time.perf_counter()
+        if r.admit_s == 0.0:               # sticky: resume never restamps
+            r.admit_s = time.perf_counter()
         self.prefill_tokens_total += length
         self.planned_token_slots += bucket
         self.useful_prefill_tokens += length
-        self._scanned[slot] = 0
+        if r.resume is None:
+            self._scanned[slot] = 0
+        else:
+            self._restore_checkpoint(r, slot)
         slots[slot] = r
+
+    def _edit_state(self, **rows) -> None:
+        """Host-side single-slot state edit: whole-array device↔host
+        round-trips instead of eager sliced updates. A sliced jnp edit
+        (``x.at[slot, :steps].set``) compiles a fresh executable per
+        (slot, steps) shape — a preemption would stall ~100 ms on XLA
+        every time it saw a new checkpoint size. Plain transfers never
+        compile, and the state arrays are a few KB."""
+        st = dict(self._state)
+        for key, (slot, value) in rows.items():
+            arr = np.array(st[key])          # device→host copy, no compile
+            arr[slot] = value
+            st[key] = jnp.asarray(arr)       # host→device, no compile
+        self._state = st
+
+    def _restore_checkpoint(self, r: Request, slot: int) -> None:
+        """Re-arm a resumed slot's decode state from the preemption
+        checkpoint: step counter, generated-token buffer and — crucially —
+        the saved ``last`` logits, so the next sampled token is bit-exact
+        regardless of how the K/V came back (swap or recompute). Sampling
+        keys fold (request_id, steps), so the stream continues exactly
+        where it stopped."""
+        rs = r.resume
+        out = np.zeros((self.max_seq_len,), np.int32)
+        out[:rs.steps] = rs.tokens
+        self._edit_state(steps=(slot, rs.steps), last=(slot, rs.last),
+                         out=(slot, out))
+        self._scanned[slot] = rs.steps
+        r.resume = None
+
+    def _arm_resumed(self, r: Request, slot: int, slots) -> None:
+        """Swap-path resume: the K/V blocks are already restored, so the
+        whole slot state (position, budget, temperature, active) is armed
+        host-side — no prefill runs at all."""
+        rs = r.resume
+        self._edit_state(pos=(slot, len(r.prompt) + rs.steps),
+                         budget=(slot, r.max_new_tokens),
+                         temp=(slot, r.temperature),
+                         rid=(slot, r.request_id),
+                         # a budget-0 slot is reaped, never decoded — the
+                         # same admission-time rule the prefill paths apply
+                         active=(slot, rs.steps < r.max_new_tokens))
+        self._restore_checkpoint(r, slot)
+        slots[slot] = r
+
+    def preempt(self, slot: int) -> None:
+        """Swap the request decoding in ``slot`` out and requeue it. Its
+        decode state (generated tokens, step count, next-sample logits) is
+        checkpointed on the host; its cache either rides along
+        (``PagedCache.swap_out`` — blocks return to the pool) or is
+        rebuilt at resume by re-prefilling prompt + generated tokens
+        (ring / ``preempt_mode='recompute'``). Resumption is token-exact.
+        Called by the scheduler under SLO pressure; public so drivers and
+        tests can force arbitrary preemption schedules."""
+        r = self._slots.pop(slot)
+        st = self._state
+        steps = int(np.asarray(st["steps"])[slot])   # transfer, no compile
+        r.resume = _ResumeState(
+            steps=steps,
+            tokens=np.array(np.asarray(st["out"])[slot, :steps]),
+            last=np.array(np.asarray(st["last"])[slot]))
+        self._edit_state(active=(slot, False))
+        if self._preempt_swap:
+            r.resume.kv, self._cache_state = self.backend.swap_out(
+                self._cache_state, slot)
+        else:
+            self._cache_state = self.backend.free_slot(self._cache_state,
+                                                       slot)
+        self._scanned.pop(slot, None)
+        self._free.append(slot)
+        r.preemptions += 1
+        self.preemptions += 1
+        self._queue.append(r)
+
+    def _try_preempt(self, slots) -> bool:
+        """Scheduler preemption callback: when the best-ranked waiting
+        request is blocked on resources, swap out the worst-ranked active
+        slot — strictly lower class only (deadlines order service, they
+        never justify eviction; equal-class preemption would thrash).
+        Mid-prefill slots are not victims: their checkpoint would be pure
+        waste (no decode state yet) and they release the pool soonest."""
+        if not self._queue or not slots:
+            return False
+        blocked = min(self._queue, key=request_rank)
+        if hasattr(self.backend, "blocks_needed"):
+            # feasibility first: eviction only helps if the blocks it can
+            # ever recover — the uncommitted free list plus everything
+            # held by strictly-lower-class slots — cover the blocked
+            # request's worst case. Without this, an oversized (or merely
+            # over-contended) request would swap out the whole lower-class
+            # active set one host round-trip at a time for nothing.
+            # worst-case demand (a shared-prefix admission may need less;
+            # the guard then errs toward letting the high-class request
+            # wait rather than toward evicting in vain)
+            worst = self.backend.blocks_needed(len(blocked.prompt),
+                                               blocked.max_new_tokens)
+            recoverable = self.backend.available_blocks() + sum(
+                self.backend.slot_commitment(s)
+                for s, req in slots.items()
+                if req.priority < blocked.priority)
+            if worst > recoverable:
+                return False
+        victim = max(slots, key=lambda s: request_rank(slots[s]))
+        if slots[victim].priority >= blocked.priority:
+            return False
+        self.preempt(victim)
+        return True
 
     def _reserve_lookahead(self, slots, k: int) -> None:
         """Top every active slot's cache reservation up to ``pos + k``
         tokens before a decode round: inside a K-scan the host cannot
         intervene, so each append the scan will perform must already have
         an allocated block. The allocator's admission-time commitment
-        guarantees the draw succeeds; the new row replays through the
-        ``begin_slot`` seam, which wipes only the *new* blocks' stale
-        positions."""
+        guarantees the draw succeeds; the new rows replay through the
+        ``begin_slots`` seam — every slot that crossed a block boundary in
+        this plan lands in *one* coalesced device update (padded to
+        ``batch_slots`` by repetition, so it compiles exactly once)
+        instead of one small dispatch per crossing slot."""
+        ups = []
         for slot, r in slots.items():
             row, covered = self.backend.reserve_lookahead(
                 slot, len(r.prompt) + self._scanned[slot] + k)
             if row is not None:
+                ups.append((slot, row, covered))
+        if not ups:
+            return
+        self.lookahead_dispatches += 1
+        if not hasattr(self, "_begin_many_fn"):
+            for slot, row, covered in ups:       # backend without batching
                 self._cache_state = self._begin_fn(
                     self._cache_state, jnp.int32(slot), jnp.asarray(row),
                     jnp.int32(covered))
+            return
+        while len(ups) < self.batch_slots:       # pad by repeating: the
+            ups.append(ups[0])                   # duplicate writes agree
+        s, rows, cov = zip(*ups)
+        self._cache_state = self._begin_many_fn(
+            self._cache_state, jnp.asarray(s, jnp.int32),
+            jnp.asarray(np.stack(rows)), jnp.asarray(cov, jnp.int32))
 
     def _decode_round(self, slots, free, done, k: int = 1):
         if not slots:
@@ -632,12 +876,17 @@ class DrainBatchEngine:
         self.decode_fn = jax.jit(lm.decode_step)
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               temperature: float = 0.0) -> int:
+               temperature: float = 0.0, priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a request. ``priority``/``deadline_s`` are recorded for
+        per-class reporting but the drain batcher stays strictly FIFO —
+        it is the measured baseline, not an SLO policy."""
         prompt = validate_prompt(prompt, max_new_tokens, self.max_seq_len,
                                  self.truncate_prompts)
         rid = self._next_id
         self._next_id += 1
-        r = Request(rid, prompt, max_new_tokens, temperature)
+        r = Request(rid, prompt, max_new_tokens, temperature,
+                    priority=priority, deadline_s=deadline_s)
         r.submit_s = time.perf_counter()
         self._queue.append(r)
         return rid

@@ -37,6 +37,15 @@ engine):
   installed as −1 at prefill, so a slot's visible context is exactly its
   real tokens.
 
+``PagedCache`` also supports **preemption**: ``swap_out`` checkpoints a
+slot's drawn blocks (every layer's K/V + per-token positions) to host
+memory and releases them through the ordinary ``free_slot`` accounting;
+``swap_in`` later draws fresh private blocks, scatters the checkpoint back
+byte-for-byte, and re-commits the undrawn budget tail to the ledger — so
+an SLO-blocked engine can evict a low-priority request's cache and restore
+it token-exactly when pressure clears (``can_resume`` gates the restore
+against the uncommitted free list).
+
 Freed prefix blocks are **retained**: a refcount-0 block whose content is
 registered in the prefix-hash index stays in the index and parks at the
 *back* of the free list (LRU order), so templated traffic shares prompt
@@ -503,6 +512,9 @@ class PagedCache(KVCacheBackend):
         self.cow_copies = 0
         self.lookahead_topups = 0
         self.retained_block_hits = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.preempt_swap_bytes = 0      # host<->device bytes moved by swaps
 
     @property
     def _free(self) -> List[int]:
@@ -766,6 +778,9 @@ class PagedCache(KVCacheBackend):
         self.cow_copies = 0
         self.lookahead_topups = 0
         self.retained_block_hits = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.preempt_swap_bytes = 0
 
     def free_slot(self, cache_state, slot):
         blocks = self._slot_blocks.pop(slot, None)
@@ -786,6 +801,133 @@ class PagedCache(KVCacheBackend):
         tables = cache_state["tables"].at[slot].set(-1)
         return {"caches": cache_state["caches"], "tables": tables}
 
+    # -- preemption: host K/V swap -------------------------------------------
+    def _swap_fns(self):
+        """Jitted fixed-shape gather/scatter for the swap path: both take a
+        full ``blocks_per_slot``-wide index vector (gather pads with the
+        trash block — harmless reads; scatter pads with ``num_blocks`` —
+        out of bounds, dropped), so each compiles exactly once and a first
+        swap landing mid-traffic never pays an XLA compile."""
+        if not hasattr(self, "_gather_fn"):
+            def gather(caches, idx):
+                return _map_kv_dicts(
+                    lambda c: {k: jnp.take(leaf, idx, axis=1)
+                               for k, leaf in c.items()}, caches)
+
+            def scatter(caches, host, phys):
+                def one(c, h):
+                    return {k: leaf.at[:, phys].set(h[k])
+                            for k, leaf in c.items()}
+
+                return _map_kv_dicts(one, caches, host)
+
+            self._gather_fn = jax.jit(gather)
+            # donate the pool: without it every swap_in materializes a
+            # second full copy of the paged KV cache — transiently doubling
+            # KV HBM in exactly the memory-pressure regime preemption
+            # exists to serve (the gather must NOT donate: its input pool
+            # stays live)
+            self._scatter_fn = jax.jit(scatter, donate_argnums=(0,))
+        return self._gather_fn, self._scatter_fn
+
+    def warm_swap(self, cache_state):
+        """Pre-compile the swap gather/scatter as no-ops (gather from the
+        trash block, scatter fully out of bounds); call while idle."""
+        gather_fn, scatter_fn = self._swap_fns()
+        m = self.blocks_per_slot
+        host = jax.device_get(gather_fn(cache_state["caches"],
+                                        jnp.zeros((m,), jnp.int32)))
+        caches = scatter_fn(cache_state["caches"], host,
+                            jnp.full((m,), self.num_blocks, jnp.int32))
+        return {"caches": caches, "tables": cache_state["tables"]}
+
+    def swap_out(self, cache_state, slot):
+        """Checkpoint ``slot``'s drawn blocks to the host and release them:
+        gathers every layer's K/V (and per-token positions) for the slot's
+        block list into numpy arrays, then returns the blocks through the
+        ordinary ``free_slot`` path — refcounts, the commitment ledger and
+        prefix retention all behave exactly as if the request completed.
+        Shared-prefix blocks are *copied*, not stolen: other holders keep
+        them, and the resumed slot gets private replicas at ``swap_in``.
+        Returns ``(host_kv, new_cache_state)``; ``host_kv`` is the cache
+        pytree restricted to the slot's (padded) block row plus the live
+        block count, opaque to the engine."""
+        blocks = self._slot_blocks.get(slot)
+        if blocks is None:
+            raise RuntimeError(f"slot {slot} holds no blocks to swap out")
+        gather_fn, _ = self._swap_fns()
+        idx = np.zeros((self.blocks_per_slot,), np.int32)   # pad: trash
+        idx[:len(blocks)] = blocks
+        host = {"n_blocks": len(blocks),
+                "caches": jax.device_get(
+                    gather_fn(cache_state["caches"], jnp.asarray(idx)))}
+        self.swap_outs += 1
+        self.preempt_swap_bytes += len(blocks) * self.block_bytes()
+        return host, self.free_slot(cache_state, slot)
+
+    def available_blocks(self) -> int:
+        """Free blocks not spoken for by outstanding commitments (the
+        quantity ``can_admit``/``can_resume`` gate on), public for the
+        engine's preemption-feasibility check."""
+        return self._available()
+
+    def slot_commitment(self, slot: int) -> int:
+        """Upper bound on the blocks admission would recover if ``slot``
+        were preempted: its drawn blocks plus its undrawn ledger gap
+        (shared blocks another slot still refcounts are counted — the
+        bound is optimistic, which only risks a preemption that recovers
+        less than hoped, never a refused feasible one)."""
+        return (len(self._slot_blocks.get(slot, ()))
+                + self._slot_gap.get(slot, 0))
+
+    def can_resume(self, prompt_len: int, max_new: int) -> bool:
+        """Whether a swapped-out request fits back in: its blocks return as
+        *private* (worst-case commitment, no sharing discount), so resume
+        demand is the full ``blocks_needed`` against the uncommitted free
+        list."""
+        return self.blocks_needed(prompt_len, max_new) <= self._available()
+
+    def swap_in(self, cache_state, slot, host_kv, prompt_len: int,
+                max_new: int):
+        """Restore a swapped-out request into ``slot``: draw fresh private
+        blocks for the checkpointed content, scatter the host K/V back
+        byte-for-byte, and re-commit the undrawn budget tail to the ledger
+        (look-ahead top-ups resume exactly where they left off). Only call
+        after ``can_resume`` said yes."""
+        total = self.blocks_needed(prompt_len, max_new)
+        n_now = host_kv["n_blocks"]
+        if total > self._available():
+            raise RuntimeError(
+                f"paged pool exhausted on resume: need {total} blocks, "
+                f"{self._available()} available")
+        if slot in self._slot_blocks:
+            raise RuntimeError(f"slot {slot} already holds blocks")
+        fresh = self._take_free(n_now)
+        for blk in fresh:
+            self._ref[blk] = 1
+        self._slot_blocks[slot] = fresh
+        self._slot_shared[slot] = 0
+        self._slot_start[slot] = prompt_len
+        self._slot_cap[slot] = total
+        self._slot_gap[slot] = total - n_now
+        self._gap_total += total - n_now
+        self.blocks_allocated_total += n_now
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        self.swap_ins += 1
+        self.preempt_swap_bytes += n_now * self.block_bytes()
+        _, scatter_fn = self._swap_fns()
+        phys = np.full((self.blocks_per_slot,), self.num_blocks, np.int32)
+        phys[:n_now] = fresh                    # pad: OOB, writes dropped
+        caches = scatter_fn(cache_state["caches"], host_kv["caches"],
+                            jnp.asarray(phys))
+        # whole-array host round-trip: a sliced eager update would compile
+        # per slot index (see ServingEngine._edit_state)
+        tables = np.array(cache_state["tables"])
+        tables[slot] = -1
+        tables[slot, :n_now] = fresh
+        return {"caches": caches, "tables": jnp.asarray(tables)}
+
     def assert_invariants(self) -> None:
         """Allocator accounting invariants (tests call this after runs and
         mid-traffic): block conservation across slots/tiers, ledger
@@ -803,6 +945,18 @@ class PagedCache(KVCacheBackend):
         assert self._gap_total == sum(self._slot_gap.values())
         assert 0 <= self._gap_total <= (len(self._free_plain)
                                         + len(self._free_cached))
+        # per-slot ledger bounds (preemption swaps slots in and out of the
+        # pool mid-flight, so check every live slot, not just the sums):
+        # drawn blocks never exceed the admission-time worst case, undrawn
+        # commitments stay non-negative, and drawn + undrawn covers the
+        # worst case (equality modulo the COW block, which draws one block
+        # beyond the shared plan)
+        for slot, blocks in self._slot_blocks.items():
+            cap = self._slot_cap[slot]
+            gap = self._slot_gap[slot]
+            assert 0 <= gap and cap >= 1
+            assert len(blocks) <= cap + 1, (slot, len(blocks), cap)  # +COW
+            assert len(blocks) + gap >= cap, (slot, len(blocks), gap, cap)
         # retention: every cached free block is indexed, and the index's
         # reverse map agrees
         for blk in self._free_cached:
@@ -818,18 +972,32 @@ class PagedCache(KVCacheBackend):
         reused from a finished tenant whose stale positions would alias into
         the new request's causal mask) and install the table row. The
         ``shared_blocks`` leading entries hold live shared-prefix (or COW
-        copy) content and must be left intact."""
+        copy) content and must be left intact. Singleton delegation to
+        ``begin_slots`` — one wipe implementation to keep correct."""
+        return self.begin_slots(cache_state,
+                                jnp.reshape(slot, (1,)),
+                                jnp.reshape(table_row,
+                                            (1, self.blocks_per_slot)),
+                                jnp.reshape(shared_blocks, (1,)))
+
+    def begin_slots(self, cache_state, slots, table_rows, shared_blocks):
+        """Batched ``begin_slot``: apply many slots' table top-ups in one
+        traced update (one dispatch when several slots cross a block
+        boundary in the same plan, instead of one replay per slot).
+        ``slots`` (S,), ``table_rows`` (S, M), ``shared_blocks`` (S,);
+        callers pad to a fixed S by *repeating* entries — duplicate rows
+        write identical values, so the scatter stays well-defined."""
         n = self.num_blocks
-        idx = jnp.arange(self.blocks_per_slot)
-        wipe = (idx >= shared_blocks) & (table_row >= 0)
-        phys = jnp.where(wipe, table_row, n)          # n = OOB -> dropped
+        idx = jnp.arange(self.blocks_per_slot)[None, :]
+        wipe = (idx >= shared_blocks[:, None]) & (table_rows >= 0)
+        phys = jnp.where(wipe, table_rows, n)         # n = OOB -> dropped
 
         def clear(c):
             return {key: (leaf.at[:, phys].set(-1) if key == "pos" else leaf)
                     for key, leaf in c.items()}
 
         caches = _map_kv_dicts(clear, cache_state["caches"])
-        tables = cache_state["tables"].at[slot].set(table_row)
+        tables = cache_state["tables"].at[slots].set(table_rows)
         return {"caches": caches, "tables": tables}
 
     def slot_view(self, cache_state, slot, ctx=None):

@@ -13,11 +13,26 @@ configurable token budget:
   budget the decodes left.
 
 Chunks are bucketed to a small power-of-two shape set (bounding retraces),
-and in-flight prefills are continued FIFO before new admissions so a
-request's time-to-first-token is never starved by later arrivals. With
+and in-flight prefills are continued before new admissions so a request's
+time-to-first-token is never starved by later arrivals. With
 ``chunk_tokens=None`` the scheduler degenerates to the legacy policy
 (whole-bucket admission), which stays the default; engines *execute*
 scheduler decisions either way — they no longer decide anything.
+
+Ordering is **SLO-aware**, not FIFO: every request carries a priority
+*class* (higher = more latency-critical) and an optional relative
+deadline, and ``request_rank`` orders by class first, earliest absolute
+deadline second (EDF within a class), submission order last — so with no
+priorities or deadlines set the policy is exactly the old FIFO. The rank
+governs *both* levers the scheduler holds: which queued request is offered
+admission (the engine's ``try_admit`` considers the best-ranked waiting
+request, strictly — no lower-class backfill in front of a blocked
+higher-class request) and which in-flight prefill gets chunk budget first.
+When the best-ranked waiting request cannot be admitted (no free slot, or
+the paged pool is out of blocks), ``plan_step`` asks the engine to
+**preempt** via the ``try_preempt`` callback: the engine swaps out its
+worst-ranked active slot — strictly lower class than the blocked request,
+never a peer — and retries admission with the freed resources.
 
 The scheduler also picks the **decode horizon**: how many fused decode
 steps the engine scans per host sync (``StepPlan.decode_steps``). With
@@ -42,6 +57,7 @@ copy-on-write divergence included).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, List, Optional, Tuple
 
 # sentinel returned by an engine's try_admit for legacy whole-prompt
@@ -70,14 +86,34 @@ def bucket_for(n: int, buckets: List[int]) -> int:
         f"— either raise max_seq_len or submit with truncation enabled")
 
 
+def request_rank(r) -> Tuple:
+    """Scheduling rank: smaller = served first. Class descending (higher
+    ``priority`` wins), then earliest absolute deadline (``submit_s +
+    deadline_s``; no deadline sorts after every deadline in its class),
+    then submission order — so with neither priorities nor deadlines set
+    the policy degenerates to exactly the old FIFO. ``None`` (plan-only
+    unit tests) ranks constant: a stable sort preserves FIFO."""
+    if r is None:
+        return (0, math.inf, 0.0, -1)
+    deadline = getattr(r, "deadline_s", None)
+    abs_deadline = (r.submit_s + deadline) if deadline is not None \
+        else math.inf
+    return (-getattr(r, "priority", 0), abs_deadline, r.submit_s,
+            r.request_id)
+
+
 @dataclasses.dataclass
 class PrefillProgress:
     """A request mid-prefill: ``next`` is the first prompt position not yet
-    computed (> 0 at admission when a shared prefix was already installed)."""
+    computed (> 0 at admission when a shared prefix was already installed).
+    ``tokens`` overrides the token source (a resumed request re-prefills
+    its prompt *plus* the tokens it already generated; the engine restores
+    its decode state when the final chunk lands)."""
     request: Any
     slot: int
     next: int
     total: int
+    tokens: Optional[Any] = None
 
     @property
     def done(self) -> bool:
@@ -186,20 +222,33 @@ class Scheduler:
     # -- the per-step decision ------------------------------------------------
     def plan_step(self, *, n_active: int, prefilling,
                   try_admit: Callable[[], Any],
-                  min_headroom: Optional[int] = None) -> StepPlan:
-        """Compose one step. ``prefilling`` maps slot -> PrefillProgress in
-        admission order; ``try_admit`` is the engine's admission effect: it
-        grants the queue head a slot (plus cache reservation) and returns
-        its PrefillProgress, MONOLITHIC for legacy admissions, or None when
-        nothing further can be admitted. ``min_headroom`` is the smallest
-        remaining decode budget across the engine's active slots (None when
-        none are active) — it caps the multi-step decode horizon. The
-        engine executes the returned chunks in order, then scans
-        ``decode_steps`` fused decode rounds over whatever is active."""
+                  min_headroom: Optional[int] = None,
+                  try_preempt: Optional[Callable[[], bool]] = None
+                  ) -> StepPlan:
+        """Compose one step. ``prefilling`` maps slot -> PrefillProgress;
+        ``try_admit`` is the engine's admission effect: it grants the
+        best-``request_rank``ed waiting request a slot (plus cache
+        reservation) and returns its PrefillProgress, MONOLITHIC for legacy
+        (and resumed) admissions, or None when nothing further can be
+        admitted. ``try_preempt`` is the engine's preemption effect: swap
+        out one active slot strictly lower-class than the best-ranked
+        waiting request and return True (False when no eligible victim) —
+        it is consulted only when admission is blocked, and every success
+        retries admission with the freed slot/blocks. ``min_headroom`` is
+        the smallest remaining decode budget across the engine's active
+        slots (None when none are active) — it caps the multi-step decode
+        horizon. The engine executes the returned chunks in order, then
+        scans ``decode_steps`` fused decode rounds over whatever is
+        active."""
         admitted = 0
         if not self.chunked:
-            while try_admit() is not None:
-                admitted += 1
+            while True:
+                if try_admit() is not None:
+                    admitted += 1
+                    continue
+                if try_preempt is not None and try_preempt():
+                    continue                 # freed a slot: retry admission
+                break
             return StepPlan((), admitted,
                             self._decode_horizon(admitted > 0, min_headroom))
 
@@ -227,14 +276,21 @@ class Scheduler:
                 spent += t
             return spent
 
-        # continue in-flight prefills first (FIFO: earlier admissions
-        # reach their first token before later ones get budget)
-        for pp in list(prefilling.values()):
+        # continue in-flight prefills first, best rank first (class, then
+        # deadline, then admission order — a latency-critical prefill gets
+        # chunk budget ahead of bulk work; the sort is stable, so untagged
+        # traffic keeps the old FIFO order)
+        for pp in sorted(prefilling.values(),
+                         key=lambda pp: request_rank(pp.request)):
             spent = plan_for(pp, spent)
-        # admit new requests into the remaining budget
+        # admit new requests into the remaining budget; when the best-
+        # ranked waiting request is blocked on resources, try preempting a
+        # lower-class slot and retry
         while spent < budget:
             pp = try_admit()
             if pp is None:
+                if try_preempt is not None and try_preempt():
+                    continue
                 break
             admitted += 1
             if pp is MONOLITHIC:

@@ -100,6 +100,74 @@ def test_free_slot_clears_table_row():
     assert bool(jnp.all(state["tables"][1] == -1))
 
 
+def test_swap_out_in_round_trips_kv_bytes():
+    """Backend-level swap checkpoint: swap_out releases the slot's blocks
+    through the ordinary ledger/free accounting, a hostile tenant may
+    overwrite the physical blocks in between, and swap_in restores the
+    K/V byte-for-byte into freshly drawn blocks."""
+
+    def flat(tree):
+        return jax.tree.leaves(tree)
+
+    lm, params = _lm(_tiny_cfg())
+    be = PagedCache(lm, params, batch_slots=2, max_seq_len=32, block_size=8,
+                    num_blocks=7, prefix_sharing=False)
+    state = be.init()
+    row = be.alloc_slot(0, 16, 8)               # 2 prompt blocks, cap 3
+    state = {"caches": state["caches"],
+             "tables": state["tables"].at[0].set(jnp.asarray(row))}
+    # stamp recognizable content into the slot's blocks
+    blocks = list(be._slot_blocks[0])
+    marked = jax.tree.map(
+        lambda leaf: leaf.at[:, jnp.asarray(blocks)].set(7), state["caches"])
+    state = {"caches": marked, "tables": state["tables"]}
+    want = [np.array(x[:, blocks]) for x in flat(state["caches"])]
+
+    host, state = be.swap_out(state, 0)
+    assert be.swap_outs == 1 and be.blocks_in_use == 0
+    assert be._gap_total == 0                   # commitment fully released
+    be.assert_invariants()
+    # another tenant scribbles over the pool (including the old blocks)
+    row1 = be.alloc_slot(1, 30, 2)
+    state = {"caches": jax.tree.map(lambda leaf: leaf * 0 - 3,
+                                    state["caches"]),
+             "tables": state["tables"].at[1].set(jnp.asarray(row1))}
+    state = be.free_slot(state, 1)
+
+    assert be.can_resume(16, 8)
+    state = be.swap_in(state, 0, host, 16, 8)
+    be.assert_invariants()
+    assert be.swap_ins == 1
+    new_blocks = be._slot_blocks[0]
+    assert len(new_blocks) == len(blocks)       # drawn now: the checkpoint
+    assert be._slot_gap[0] == 1                 # budget tail re-committed
+    got = [np.array(x[:, new_blocks]) for x in flat(state["caches"])]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    # table row points at the restored blocks, tail unallocated
+    tab = np.array(state["tables"][0])
+    assert list(tab[:len(new_blocks)]) == new_blocks
+    assert (tab[len(new_blocks):] == -1).all()
+    state = be.free_slot(state, 0)
+    assert be.blocks_in_use == 0 and be._gap_total == 0
+    be.assert_invariants()
+
+
+def test_swap_in_refuses_when_pool_spoken_for():
+    lm, params = _lm(_tiny_cfg())
+    be = PagedCache(lm, params, batch_slots=2, max_seq_len=32, block_size=8,
+                    num_blocks=5, prefix_sharing=False)
+    state = be.init()
+    row = be.alloc_slot(0, 16, 8)
+    state = {"caches": state["caches"],
+             "tables": state["tables"].at[0].set(jnp.asarray(row))}
+    host, state = be.swap_out(state, 0)
+    be.alloc_slot(1, 10, 8)                     # commits 3 of 4 blocks
+    assert not be.can_resume(16, 8)             # resume needs 3 > 1 left
+    with pytest.raises(RuntimeError, match="resume"):
+        be.swap_in(state, 0, host, 16, 8)
+
+
 def test_hbm_accounting():
     lm, params = _lm(_tiny_cfg())
     ring = RingCache(lm, params, batch_slots=4, max_seq_len=32)

@@ -1,0 +1,391 @@
+"""SLO-aware scheduling with preemption.
+
+Policy unit tests (rank arithmetic, chunk-budget ordering, the preempt
+seam) plus the engine acceptance contract: **preemption is output-exact**.
+Random preempt/resume schedules over mixed-priority traffic must produce
+token-for-token the outputs of an uncontended run — greedy and keyed
+sampling, on the ring (recompute resume), paged (host K/V swap) and
+windowed-paged backends — and ``PagedCache.assert_invariants`` must hold
+after every swap, with the free list full and the ledger empty after every
+drain.
+"""
+import collections
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, dense_stages
+from repro.models.model import LM
+from repro.serving import Request, ServingEngine
+from repro.serving.scheduler import (PrefillProgress, Scheduler,
+                                     request_rank)
+
+
+def _tiny_cfg(layers=2, window=None):
+    return ModelConfig(
+        name="tiny", family="dense", source="t", num_layers=layers,
+        d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        vocab_size=64, stages=dense_stages(layers, window=window),
+        param_dtype="float32")
+
+
+def _lm(cfg):
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    return lm, params
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return _lm(_tiny_cfg())
+
+
+def _mixed_trace(n=6, seed=1, budgets=(3, 12)):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 60, size=int(rng.integers(3, 12))),
+             int(rng.integers(*budgets))) for _ in range(n)]
+
+
+def _assert_same(a, b):
+    assert set(a) == set(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid], b[rid])
+
+
+# ---------------------------------------------------------------------------
+# Rank arithmetic (no engine, no device)
+# ---------------------------------------------------------------------------
+
+def _req(rid, *, priority=0, deadline_s=None, submit_s=0.0):
+    r = Request(rid, np.arange(4), 4, priority=priority,
+                deadline_s=deadline_s)
+    r.submit_s = submit_s
+    return r
+
+
+def test_request_rank_class_then_deadline_then_fifo():
+    lo = _req(0, priority=0, submit_s=1.0)
+    hi = _req(1, priority=2, submit_s=5.0)
+    # class dominates arrival order
+    assert request_rank(hi) < request_rank(lo)
+    # EDF within a class: the later submit with the earlier absolute
+    # deadline wins
+    slack = _req(2, priority=1, deadline_s=9.0, submit_s=1.0)   # abs 10
+    tight = _req(3, priority=1, deadline_s=2.0, submit_s=3.0)   # abs 5
+    assert request_rank(tight) < request_rank(slack)
+    # a deadline beats no deadline in the same class
+    none = _req(4, priority=1, submit_s=0.0)
+    assert request_rank(slack) < request_rank(none)
+    # no tags at all -> submission order (old FIFO)
+    a, b = _req(5, submit_s=1.0), _req(6, submit_s=2.0)
+    assert request_rank(a) < request_rank(b)
+    # None (plan-only tests) ranks constant: stable sorts preserve FIFO
+    assert request_rank(None) == request_rank(None)
+
+
+def test_chunk_budget_ordered_by_class():
+    """A higher-class in-flight prefill gets the step's chunk budget ahead
+    of an earlier-admitted bulk prefill."""
+    s = Scheduler(batch_slots=2, chunk_tokens=8, token_budget=10)
+    bulk = PrefillProgress(request=_req(0, priority=0), slot=0, next=0,
+                           total=20)
+    crit = PrefillProgress(request=_req(1, priority=3), slot=1, next=0,
+                           total=6)
+    prefilling = collections.OrderedDict([(0, bulk), (1, crit)])
+    plan = s.plan_step(n_active=2, prefilling=prefilling,
+                       try_admit=lambda: None)
+    # 2 decode tokens + the critical 6-token chunk; the bulk prefill's
+    # full chunk no longer fits and is NOT planned ahead of it
+    assert [(c.slot, c.length, c.final) for c in plan.chunks] == \
+        [(1, 6, True)]
+
+
+def test_plan_retries_admission_after_preempt():
+    s = Scheduler(batch_slots=2, chunk_tokens=8)
+    granted = []
+    state = {"preempted": False}
+
+    def try_admit():
+        if not state["preempted"] or granted:
+            return None
+        pp = PrefillProgress(request=_req(9, priority=5), slot=0, next=0,
+                             total=4)
+        granted.append(pp)
+        return pp
+
+    def try_preempt():
+        if state["preempted"]:
+            return False
+        state["preempted"] = True
+        return True
+
+    plan = s.plan_step(n_active=1, prefilling=collections.OrderedDict(),
+                       try_admit=try_admit, try_preempt=try_preempt)
+    # blocked -> preempt -> admission retried and granted
+    assert state["preempted"] and plan.admitted == 1
+    assert [c.slot for c in plan.chunks] == [0]
+
+
+def test_plan_stops_when_preempt_refuses():
+    s = Scheduler(batch_slots=2, chunk_tokens=8)
+    calls = {"preempt": 0}
+
+    def try_preempt():
+        calls["preempt"] += 1
+        return False
+
+    plan = s.plan_step(n_active=1, prefilling=collections.OrderedDict(),
+                       try_admit=lambda: None, try_preempt=try_preempt)
+    assert plan.admitted == 0 and calls["preempt"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine-level policy behavior (fast)
+# ---------------------------------------------------------------------------
+
+def test_admission_order_is_class_then_deadline(tiny):
+    """A 1-slot engine serializes service, so completion order reveals
+    admission order: classes first, EDF within a class."""
+    lm, params = tiny
+    eng = ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                        min_bucket=4)
+    eng.submit(np.arange(4), max_new_tokens=2)                 # rid 0, FIFO
+    eng.submit(np.arange(5), max_new_tokens=2, priority=1,
+               deadline_s=60.0)                                # rid 1
+    eng.submit(np.arange(6), max_new_tokens=2, priority=1,
+               deadline_s=1.0)                                 # rid 2, EDF
+    eng.submit(np.arange(7), max_new_tokens=2, priority=2)     # rid 3
+    done = eng.run()
+    finish_order = sorted(done, key=lambda rid: done[rid].finish_s)
+    assert finish_order == [3, 2, 1, 0]
+    assert eng.preemptions == 0      # ordering alone, nothing was running
+
+
+def test_no_preemption_within_a_class(tiny):
+    """Equal-class pressure never preempts: deadlines order service, they
+    don't justify eviction (preemption thrash)."""
+    lm, params = tiny
+    eng = ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        num_pool_blocks=5)
+    eng.submit(np.arange(4), max_new_tokens=8)
+    eng.step()                                   # rid 0 holds the slot
+    eng.submit(np.arange(4), max_new_tokens=2, deadline_s=0.001)
+    done = eng.run()
+    assert eng.preemptions == 0
+    assert done[0].finish_s < done[1].finish_s   # FIFO preserved
+
+
+def test_preemption_timing_sticky_and_counted(tiny):
+    """A preempted-then-resumed request keeps its first-admission stamp
+    (no fresh TTFT) and counts its preemptions."""
+    lm, params = tiny
+    eng = ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8)
+    eng.submit(np.arange(4), max_new_tokens=6)
+    eng.step()                                   # admit (arming round)
+    eng.step()                                   # first token exists
+    r = eng._slots[0]
+    admit0, ttft0 = r.admit_s, r.ttft_s
+    assert admit0 > 0 and ttft0 > 0
+    eng.preempt(0)
+    assert r.preemptions == 1 and eng.preemptions == 1
+    done = eng.run()                             # resumes and finishes
+    assert done[0].admit_s == admit0             # sticky across swap-out
+    assert done[0].ttft_s == ttft0
+    assert done[0].preemptions == 1
+
+
+def test_peak_active_slots_counts_prefill_only_steps(tiny):
+    """Steps where requests are prefilling but none are decoding used to
+    be invisible to ``peak_active_slots``."""
+    lm, params = tiny
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                        min_bucket=4, chunk_tokens=4, token_budget=6)
+    eng.submit(np.arange(20), max_new_tokens=2)  # 20 tokens: several chunks
+    eng.step()                                   # chunk 1: prefill-only step
+    assert not eng._slots and eng._prefilling
+    assert eng.peak_active_slots == 1
+    eng.run()
+
+
+def test_batched_lookahead_coalesces_dispatches(tiny):
+    """Several slots crossing a block boundary in the same plan share one
+    coalesced table update: reservation dispatches < per-slot top-ups."""
+    lm, params = tiny
+    eng = ServingEngine(lm, params, batch_slots=3, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        max_decode_steps=8)
+    # same shape/budget: slots advance in lockstep and cross together
+    for _ in range(3):
+        eng.submit(np.arange(6), max_new_tokens=20)
+    eng.run()
+    assert eng.backend.lookahead_topups > eng.lookahead_dispatches >= 1
+
+
+def test_infeasible_request_never_triggers_eviction_storm(tiny):
+    """A high-priority request whose worst case exceeds the whole pool can
+    never admit: it must not evict the active lower-class work one swap at
+    a time before the engine raises."""
+    lm, params = tiny
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        num_pool_blocks=4)          # 3 usable blocks
+    eng.submit(np.arange(4), max_new_tokens=8)      # fits: 2 blocks
+    eng.step()
+    eng.submit(np.arange(8), max_new_tokens=24, priority=5)  # needs 4 > 3
+    with pytest.raises(RuntimeError, match="whole pool"):
+        while eng.pending:
+            eng.step()
+    assert eng.preemptions == 0                     # nobody was evicted
+
+
+def test_preempt_refused_when_recovery_cannot_cover_demand(tiny):
+    """Eviction only helps if the free list plus every strictly-lower-class
+    slot's blocks cover the blocked request — a feasible-in-principle
+    request must not evict a small low-class slot whose blocks cannot
+    possibly satisfy it (pure waste: the swap costs a host round-trip and
+    the victim requeues behind the still-blocked request)."""
+    lm, params = tiny
+    eng = ServingEngine(lm, params, batch_slots=3, max_seq_len=32,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        num_pool_blocks=7)          # 6 usable
+    eng.submit(np.arange(4), max_new_tokens=8)               # pri 0: 2 blk
+    eng.submit(np.arange(8), max_new_tokens=20, priority=2)  # pri 2: 4 blk
+    eng.step()                                      # pool fully committed
+    # pri 1 needs 4 blocks; recoverable = 0 free + 2 (the pri-0 slot) < 4
+    eng.submit(np.arange(8), max_new_tokens=20, priority=1)
+    done = eng.run()
+    assert eng.preemptions == 0                     # waited, no vain evict
+    assert len(done) == 3 and all(r.output is not None
+                                  for r in done.values())
+    eng.backend.assert_invariants()
+
+
+def test_preempt_mode_validation(tiny):
+    lm, params = tiny
+    with pytest.raises(ValueError, match="preempt_mode"):
+        ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                      preempt_mode="bogus")
+    with pytest.raises(ValueError, match="swap"):
+        ServingEngine(lm, params, batch_slots=1, max_seq_len=32,
+                      preempt_mode="swap")      # ring has no swap pair
+
+
+# ---------------------------------------------------------------------------
+# Preemption exactness: the acceptance contract
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    "ring_recompute": (lambda: _tiny_cfg(), {}),
+    "paged_swap": (lambda: _tiny_cfg(),
+                   dict(cache_backend="paged", block_size=8)),
+    "paged_recompute": (lambda: _tiny_cfg(),
+                        dict(cache_backend="paged", block_size=8,
+                             chunk_tokens=4, preempt_mode="recompute")),
+    "windowed_paged_swap": (lambda: _tiny_cfg(window=8),
+                            dict(cache_backend="paged", block_size=8)),
+}
+
+
+def _run_with_random_preemptions(lm, params, trace, *, seed, temperature=0.0,
+                                 **kw):
+    """Drive step() and, between steps, preempt a random active slot with
+    some probability — a random preempt/resume schedule."""
+    rng = np.random.default_rng(seed)
+    eng = ServingEngine(lm, params, max_seq_len=32, min_bucket=4,
+                        batch_slots=2, **kw)
+    for prompt, max_new in trace:
+        eng.submit(prompt, max_new_tokens=max_new, temperature=temperature)
+    while eng.pending:
+        eng.step()
+        if eng._slots and rng.random() < 0.4:
+            eng.preempt(int(rng.choice(list(eng._slots))))
+        if hasattr(eng.backend, "assert_invariants"):
+            eng.backend.assert_invariants()       # holds after every swap
+    done = eng.run()
+    return eng, {rid: r.output for rid, r in done.items()}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+@pytest.mark.parametrize("temperature", (0.0, 0.8))
+def test_random_preemption_schedules_are_exact(name, temperature):
+    """Token-for-token vs the uncontended engine under random forced
+    preempt/resume schedules, greedy and keyed sampling, all backends."""
+    cfg_fn, kw = CONFIGS[name]
+    lm, params = _lm(cfg_fn())
+    trace = _mixed_trace(n=6, seed=2)
+    base_eng = ServingEngine(lm, params, max_seq_len=32, min_bucket=4,
+                             batch_slots=6)
+    for prompt, max_new in trace:
+        base_eng.submit(prompt, max_new_tokens=max_new,
+                        temperature=temperature)
+    base = {rid: r.output for rid, r in base_eng.run().items()}
+    for seed in (0, 1):
+        eng, out = _run_with_random_preemptions(
+            lm, params, trace, seed=seed, temperature=temperature, **kw)
+        _assert_same(base, out)
+        assert eng.preemptions > 0, "schedule never preempted — tune seed"
+        if hasattr(eng.backend, "assert_invariants"):
+            be = eng.backend
+            be.assert_invariants()
+            # drained: free list full, ledger empty, no leaked refcounts
+            assert sorted(be._free) == list(range(1, be.num_blocks))
+            assert be._gap_total == 0 and be._ref == {}
+
+
+@pytest.mark.slow
+def test_random_preemption_with_multi_step_decode():
+    """Preemption composes with the K-scan: checkpoints are taken at host
+    syncs, where the host-side step mirror is exact."""
+    lm, params = _lm(_tiny_cfg())
+    trace = _mixed_trace(n=6, seed=3)
+    base_eng = ServingEngine(lm, params, max_seq_len=32, min_bucket=4,
+                             batch_slots=6)
+    for prompt, max_new in trace:
+        base_eng.submit(prompt, max_new_tokens=max_new)
+    base = {rid: r.output for rid, r in base_eng.run().items()}
+    for kw in (dict(cache_backend="paged", block_size=8, max_decode_steps=8),
+               dict(max_decode_steps=4, chunk_tokens=8)):
+        eng, out = _run_with_random_preemptions(lm, params, trace, seed=4,
+                                                **kw)
+        _assert_same(base, out)
+        assert eng.preemptions > 0
+
+
+@pytest.mark.slow
+def test_blocked_high_priority_preempts_and_wins():
+    """The end-to-end SLO story: a high-class arrival lands on a starved
+    pool, evicts a bulk request's blocks, is served at once, and the bulk
+    request resumes token-exactly."""
+    lm, params = _lm(_tiny_cfg())
+    low = [(np.arange(6), 20), (np.arange(8), 20)]
+    hi = (np.arange(4), 4)
+    base_eng = ServingEngine(lm, params, max_seq_len=32, min_bucket=4,
+                             batch_slots=4)
+    for p, mn in low + [hi]:
+        base_eng.submit(p, max_new_tokens=mn)
+    base = {rid: r.output for rid, r in base_eng.run().items()}
+
+    eng = ServingEngine(lm, params, max_seq_len=32, min_bucket=4,
+                        batch_slots=3, cache_backend="paged", block_size=8,
+                        num_pool_blocks=9, max_decode_steps=4)
+    for p, mn in low:
+        eng.submit(p, max_new_tokens=mn)
+    for _ in range(3):
+        eng.step()                            # bulk fills the pool
+    eng.submit(hi[0], max_new_tokens=hi[1], priority=5)
+    while eng.pending:
+        eng.step()
+        eng.backend.assert_invariants()
+    done = eng._done
+    _assert_same(base, {rid: r.output for rid, r in done.items()})
+    assert eng.preemptions >= 1
+    assert eng.backend.swap_outs >= 1 and eng.backend.swap_ins >= 1
+    # the critical request finished before both bulk requests
+    assert done[2].finish_s < min(done[0].finish_s, done[1].finish_s)
+    assert done[2].preemptions == 0
+    assert max(done[0].preemptions, done[1].preemptions) >= 1
+    assert sorted(eng.backend._free) == list(range(1, eng.backend.num_blocks))
