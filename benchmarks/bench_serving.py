@@ -41,10 +41,22 @@ sub-check pins that the horizon's collapse-under-prefill rule keeps p99
 TTFT unregressed. Every section now reports ``host_syncs`` and
 ``tokens_per_sync`` alongside the throughput numbers.
 
+The ``chaos_recovery`` section answers the robustness question: under a
+seeded ``FaultPlan`` (poisoned decode dispatches, failed KV swaps in both
+directions, transient pool exhaustion, one injected mid-flight
+cancellation), what fraction of the fault-free goodput does
+checkpoint-based retry preserve, how fast do faulted requests get back
+into a slot (recovery-latency p50/p99), and does the cascade's circuit
+breaker demonstrably reroute edge→cloud during an outage? Every
+surviving request must be token-for-token identical to the fault-free
+run; the CI gate requires zero wedged requests and goodput ≥ 70% of
+fault-free.
+
     PYTHONPATH=src python -m benchmarks.run --only serving
     PYTHONPATH=src python -m benchmarks.bench_serving --cache-backend paged
     PYTHONPATH=src python -m benchmarks.bench_serving --chunk-tokens 16
     PYTHONPATH=src python -m benchmarks.bench_serving --smoke
+    PYTHONPATH=src python -m benchmarks.bench_serving --chaos
 """
 from __future__ import annotations
 
@@ -57,7 +69,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, dense_stages
 from repro.models.model import LM
-from repro.serving import DrainBatchEngine, PagedCache, ServingEngine
+from repro.serving import (DrainBatchEngine, FaultPlan, PagedCache,
+                           ServingEngine)
 
 
 def _model() -> Tuple[LM, dict]:
@@ -205,9 +218,14 @@ def _drive(engine, trace, *, pump: bool = False) -> dict:
 
 
 def _request_stats(engine, done, wall: float) -> dict:
-    lats = np.array(sorted(r.latency_s for r in done.values()))
-    ttfts = np.array(sorted(r.ttft_s for r in done.values()))
-    toks = sum(len(r.output) for r in done.values())
+    # latency percentiles cover only requests that ran to completion:
+    # rejected / cancelled / quarantined terminals (possible once a fault
+    # plan is armed) have no meaningful TTFT
+    finished = [r for r in done.values()
+                if getattr(r, "status", "done") == "done"]
+    lats = np.array(sorted(r.latency_s for r in finished))
+    ttfts = np.array(sorted(r.ttft_s for r in finished))
+    toks = sum(len(r.output) for r in finished)
     stats = {
         "requests": len(done),
         "generated_tokens": toks,
@@ -513,6 +531,144 @@ def slo_comparison(*, slots: int = 4, max_seq_len: int = 128,
     return out
 
 
+def _breaker_probe(seed: int = 0) -> dict:
+    """Edge outage through the serving cascade: three consecutive gate
+    failures trip the circuit breaker open, requests fail over to the
+    cloud engine with the forwarded deadline shrunk by the observed
+    degradation, and a successful half-open probe closes it again once
+    the outage ends. Returns the breaker/reroute accounting."""
+    from repro.cascade.ecc_infer import CascadeLM, edge_variant
+    from repro.cascade.gate import make_thresholds
+    from repro.serving import CascadeServingEngine
+    cfg = ModelConfig(
+        name="bench-cascade", family="dense", source="bench", num_layers=2,
+        d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        vocab_size=64, stages=dense_stages(2), param_dtype="float32")
+    edge_cfg = edge_variant(cfg, layers=1)
+    cloud, edge = LM(cfg, kv_chunk=8), LM(edge_cfg, kv_chunk=8)
+    cp, _ = cloud.init(jax.random.PRNGKey(0))
+    ep, _ = edge.init(jax.random.PRNGKey(1))
+    cascade = CascadeLM(edge, cloud,
+                        thresholds=make_thresholds(hi=0.01, lo=0.001))
+    plan = FaultPlan(seed=seed, edge=[0, 1, 2])   # outage spans 3 attempts
+    eng = CascadeServingEngine(cascade, ep, cp, batch_slots=2,
+                               max_seq_len=32, fault_plan=plan,
+                               breaker_failure_threshold=2,
+                               breaker_cooldown=2)
+    rng = np.random.default_rng(seed)
+    for i in range(8):
+        eng.submit(rng.integers(0, 60, size=4 + i), max_new_tokens=3,
+                   deadline_s=30.0)
+    eng.run()
+    snap = eng.engine_metrics()
+    return {"edge_failures": snap["edge_failures"],
+            "rerouted": snap["rerouted"],
+            "trips": snap["breaker"]["trips"],
+            "state": snap["breaker"]["state"],
+            "degradation_s": round(snap["degradation_s"], 4)}
+
+
+def chaos_comparison(*, slots: int = 3, max_seq_len: int = 64,
+                     block_size: int = 8, seed: int = 0, n: int = 10,
+                     chaos_seed: int = 11) -> dict:
+    """Fault-free vs chaos run of the identical trace on the paged
+    engine. The seeded plan poisons decode dispatches, fails swaps in
+    both directions, injects transient pool exhaustion, and cancels one
+    request mid-flight; recovery rolls faulted slots back to host
+    checkpoints and requeues with bounded backoff. Reports goodput under
+    faults vs fault-free, survivor token-exactness, recovery-latency
+    p50/p99, terminal dispositions (done/failed/cancelled), and — via a
+    cascade sub-run with an edge outage — circuit-breaker trips and
+    edge→cloud reroutes."""
+    lm, params = _model()
+    kw = dict(batch_slots=slots, max_seq_len=max_seq_len, min_bucket=8,
+              cache_backend="paged", block_size=block_size,
+              num_pool_blocks=slots * (max_seq_len // block_size) + 4,
+              max_retries=6)
+
+    def leg(plan):
+        eng = ServingEngine(lm, params, **kw)
+        _warm_buckets(eng)
+        eng.warm_compile()
+        _reset_counters(eng)
+        eng._status_counts.clear()
+        eng._faults = plan              # armed only for the measured trace
+        rng = np.random.default_rng(seed)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            eng.submit(rng.integers(0, 256, size=int(rng.integers(
+                5, 33))).astype(np.int32),
+                max_new_tokens=int(rng.choice((4, 8, 16))))
+        done = eng.run()
+        return eng, done, time.perf_counter() - t0
+
+    def goodput(done, wall):
+        return sum(len(r.output) for r in done.values()
+                   if r.status == "done") / wall
+
+    _, base_done, base_wall = leg(None)
+    plan = FaultPlan(seed=chaos_seed,
+                     step={"prob": 0.12, "max_fires": 3},
+                     swap_out={"prob": 0.4, "max_fires": 2},
+                     swap_in={"prob": 0.4, "max_fires": 2},
+                     pool={"prob": 0.1, "max_fires": 3},
+                     cancel=[2])
+    eng, done, wall = leg(plan)
+    survivors = {rid: r for rid, r in done.items() if r.status == "done"}
+    exact = all(np.array_equal(r.output, base_done[rid].output)
+                for rid, r in survivors.items())
+    m = eng.metrics()
+    base_rate = goodput(base_done, base_wall)
+    chaos_rate = goodput(done, wall)
+    return {
+        "workload": {"requests": n, "slots": slots,
+                     "max_seq_len": max_seq_len,
+                     "pool_blocks": kw["num_pool_blocks"]},
+        "fault_plan": {"seed": chaos_seed, "fired": plan.fired()},
+        "fault_free": {"goodput_tokens_per_s": round(base_rate, 2),
+                       "wall_s": round(base_wall, 4),
+                       "requests_done": len(base_done)},
+        "chaos": {"goodput_tokens_per_s": round(chaos_rate, 2),
+                  "wall_s": round(wall, 4),
+                  "terminal": m["terminal"],
+                  "wedged": n - len(done),
+                  "quarantined": m["quarantined"],
+                  "cancelled": m["terminal"].get("cancelled", 0),
+                  "retries_total": m["retries_total"],
+                  "fault_recoveries": m["fault_recoveries"],
+                  "recovery_latency": {
+                      "count": m["recovery"]["count"],
+                      "p50_s": round(m["recovery"]["p50_s"], 4),
+                      "p99_s": round(m["recovery"]["p99_s"], 4)}},
+        "survivors": len(survivors),
+        "survivors_token_exact": bool(exact),
+        "goodput_ratio_chaos_over_fault_free": round(
+            chaos_rate / max(base_rate, 1e-9), 3),
+        "breaker": _breaker_probe(seed=seed),
+    }
+
+
+def chaos_smoke() -> dict:
+    """CI chaos gate: a fixed fault schedule through the paged engine must
+    leave zero wedged requests (every submission reaches a terminal
+    state), every survivor token-for-token identical to the fault-free
+    run, goodput ≥ 70% of fault-free, and the cascade breaker must
+    demonstrably reroute at least one request edge→cloud."""
+    chaos = chaos_comparison(slots=2, max_seq_len=64, n=8, seed=0)
+    assert chaos["chaos"]["wedged"] == 0, (
+        f"chaos wedged {chaos['chaos']['wedged']} requests "
+        f"(terminal: {chaos['chaos']['terminal']})")
+    assert chaos["survivors_token_exact"], (
+        "a chaos survivor diverged from its fault-free output")
+    ratio = chaos["goodput_ratio_chaos_over_fault_free"]
+    assert ratio >= 0.7, (
+        f"goodput under faults fell to {ratio} of fault-free (< 0.7)")
+    assert chaos["breaker"]["rerouted"] >= 1, (
+        "edge outage never rerouted a request to the cloud")
+    assert chaos["breaker"]["trips"] >= 1, "breaker never tripped"
+    return chaos
+
+
 def run_comparison(n_requests: int = 24, slots: int = 4, seed: int = 0,
                    max_seq_len: int = 128, block_size: int = 8,
                    cache_backend: str = "ring",
@@ -576,6 +732,8 @@ def run_comparison(n_requests: int = 24, slots: int = 4, seed: int = 0,
         "multi_step_decode": multi_step_comparison(slots=slots, seed=seed),
         "slo_scheduling": slo_comparison(slots=slots, seed=seed,
                                          block_size=block_size),
+        "chaos_recovery": chaos_comparison(slots=3, seed=seed,
+                                           block_size=block_size),
         "speedup_tokens_per_s": round(
             continuous["tokens_per_s"] / baseline["tokens_per_s"], 2),
     }
@@ -615,6 +773,15 @@ def run() -> List[tuple]:
                  f"tokens_per_s_ratio="
                  f"{slo['tokens_per_s_ratio_slo_over_fifo']};"
                  f"preemptions={slo['slo']['preemptions']}"))
+    ch = res["chaos_recovery"]
+    rows.append(("serving/chaos_recovery", 0.0,
+                 f"goodput_ratio="
+                 f"{ch['goodput_ratio_chaos_over_fault_free']};"
+                 f"survivors_exact={ch['survivors_token_exact']};"
+                 f"recovery_p99_s={ch['chaos']['recovery_latency']['p99_s']};"
+                 f"quarantined={ch['chaos']['quarantined']};"
+                 f"breaker_trips={ch['breaker']['trips']};"
+                 f"rerouted={ch['breaker']['rerouted']}"))
     run.last_result = res          # run.py picks this up for the JSON dump
     return rows
 
@@ -692,6 +859,19 @@ def smoke() -> dict:
         f"SLO scheduling cost {slo['tokens_per_s_ratio_slo_over_fifo']} "
         f"of FIFO throughput (> 10% regression)")
 
+    # chaos gate: a fixed fault schedule must wedge nothing, keep every
+    # survivor token-exact, hold goodput >= 70% of fault-free, and the
+    # cascade breaker must reroute at least one request edge->cloud
+    chaos = chaos_smoke()
+    out["chaos_recovery"] = {
+        "goodput_ratio": chaos["goodput_ratio_chaos_over_fault_free"],
+        "survivors": chaos["survivors"],
+        "wedged": chaos["chaos"]["wedged"],
+        "quarantined": chaos["chaos"]["quarantined"],
+        "breaker_trips": chaos["breaker"]["trips"],
+        "rerouted": chaos["breaker"]["rerouted"],
+    }
+
     # regression gate: the headline continuous-vs-drain speedup must hold
     # (recorded 4.4-5.1 in BENCH_serving.json runs; CI fails below 4.0)
     lm2, params2 = _model()
@@ -724,12 +904,20 @@ def main() -> None:
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny run for CI: assert tokens/s > 0 and exit")
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos gate only: fixed fault schedule, assert "
+                         "zero wedged / survivor exactness / goodput >= "
+                         "70%% of fault-free, and exit")
     args = ap.parse_args()
     if args.smoke:
         for name, stats in smoke().items():
             line = "; ".join(f"{k}={v}" for k, v in stats.items()
                              if not isinstance(v, (dict, list)))
             print(f"smoke/{name}: {line}")
+        return
+    if args.chaos:
+        import json
+        print(json.dumps(chaos_smoke(), indent=2))
         return
     import json
     res = run_comparison(n_requests=args.requests, slots=args.slots,

@@ -30,6 +30,19 @@ class MonitoringService(EventLog):
     def counters(self, kind: str) -> int:
         return len(self.query(kind))
 
+    # -- serving-engine snapshots ---------------------------------------------
+    def record_serving(self, component: str, snapshot: Dict) -> None:
+        """Ingest a ``ServingEngine.metrics()`` (or
+        ``CascadeServingEngine.engine_metrics()``) snapshot for
+        ``component`` — the serving stack's health feed (terminal request
+        dispositions, fault/retry accounting, breaker state)."""
+        self.log("serving_metrics", component=component, snapshot=snapshot)
+
+    def serving_snapshot(self, component: str) -> Optional[Dict]:
+        """Latest serving snapshot recorded for ``component``."""
+        evs = self.query("serving_metrics", component=component)
+        return evs[-1]["snapshot"] if evs else None
+
     def component_status(self) -> Dict[str, str]:
         status: Dict[str, str] = {}
         for ev in self.events:

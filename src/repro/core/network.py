@@ -18,21 +18,40 @@ from repro.core.sim import SimClock
 
 @dataclasses.dataclass
 class Link:
+    """``fault_plan`` (a ``repro.serving.faults.FaultPlan``, duck-typed —
+    anything with ``fire(seam)``) injects WAN pathologies per transfer:
+    seam ``wan_spike`` adds ``spike_s`` one-way latency to that transfer,
+    seam ``wan_outage`` takes the link down for ``outage_s`` first (the
+    transfer — and everything queued behind it — starts after the outage
+    window, matching a dead-then-recovered pipe)."""
     bandwidth_mbps: float
     delay_s: float = 0.0
     jitter_s: float = 0.0
     _busy_until: float = 0.0
     bytes_sent: int = 0
+    fault_plan: Optional[object] = None
+    spike_s: float = 0.25
+    outage_s: float = 1.0
+    outages: int = 0
+    spikes: int = 0
 
     def transfer(self, clock: SimClock, nbytes: int,
                  rng: Optional[random.Random] = None) -> float:
         """Enqueue a transfer; returns the arrival time."""
         tx = nbytes * 8.0 / (self.bandwidth_mbps * 1e6)
         start = max(clock.now, self._busy_until)
+        extra = 0.0
+        if self.fault_plan is not None:
+            if self.fault_plan.fire("wan_outage"):
+                self.outages += 1
+                start += self.outage_s
+            if self.fault_plan.fire("wan_spike"):
+                self.spikes += 1
+                extra = self.spike_s
         self._busy_until = start + tx
         jitter = rng.uniform(0, self.jitter_s) if (rng and self.jitter_s) else 0.0
         self.bytes_sent += nbytes
-        return self._busy_until + self.delay_s + jitter
+        return self._busy_until + self.delay_s + jitter + extra
 
     @property
     def queue_s(self) -> float:
@@ -46,7 +65,7 @@ class NetworkModel:
     def __init__(self, clock: SimClock, *, lan_mbps: float = 100.0,
                  uplink_mbps: float = 20.0, downlink_mbps: float = 40.0,
                  wan_delay_s: float = 0.0, jitter_s: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, fault_plan: Optional[object] = None):
         self.clock = clock
         self.rng = random.Random(seed)
         self.lan_mbps = lan_mbps
@@ -54,6 +73,9 @@ class NetworkModel:
         self.downlink_mbps = downlink_mbps
         self.wan_delay_s = wan_delay_s
         self.jitter_s = jitter_s
+        # WAN chaos: spikes/outages apply to cross-boundary links only
+        # (the LAN inside a cluster is not the fragile part of the story)
+        self.fault_plan = fault_plan
         self._links: Dict[Tuple[str, str], Link] = {}
 
     def link(self, src: ClusterId, dst: ClusterId) -> Link:
@@ -62,11 +84,14 @@ class NetworkModel:
             if src == dst:
                 l = Link(self.lan_mbps, 0.0)
             elif dst.is_cloud and not src.is_cloud:
-                l = Link(self.uplink_mbps, self.wan_delay_s, self.jitter_s)
+                l = Link(self.uplink_mbps, self.wan_delay_s, self.jitter_s,
+                         fault_plan=self.fault_plan)
             elif src.is_cloud and not dst.is_cloud:
-                l = Link(self.downlink_mbps, self.wan_delay_s, self.jitter_s)
+                l = Link(self.downlink_mbps, self.wan_delay_s, self.jitter_s,
+                         fault_plan=self.fault_plan)
             else:  # EC <-> EC goes through the CC in the paper's topology
-                l = Link(self.uplink_mbps, 2 * self.wan_delay_s, self.jitter_s)
+                l = Link(self.uplink_mbps, 2 * self.wan_delay_s, self.jitter_s,
+                         fault_plan=self.fault_plan)
             self._links[key] = l
         return self._links[key]
 

@@ -1,6 +1,8 @@
 from repro.serving.engine import (DrainBatchEngine, Request, ServingEngine,
                                   validate_prompt)
-from repro.serving.cascade_engine import CascadeEngine, CascadeServingEngine
+from repro.serving.cascade_engine import (CascadeEngine, CascadeServingEngine,
+                                          CircuitBreaker)
+from repro.serving.faults import FaultError, FaultPlan, SeamSpec
 from repro.serving.kv_cache import (KVCacheBackend, PagedCache, PagedLayout,
                                     RING, RingCache, RingLayout, make_backend)
 from repro.serving.sampler import (request_keys, sample_logits,
@@ -10,7 +12,9 @@ from repro.serving.scheduler import (ChunkTask, PrefillProgress, Scheduler,
                                      prompt_buckets, request_rank)
 
 __all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
-           "CascadeServingEngine", "sample_logits", "sample_logits_batch",
+           "CascadeServingEngine", "CircuitBreaker",
+           "FaultPlan", "FaultError", "SeamSpec",
+           "sample_logits", "sample_logits_batch",
            "sample_logits_keyed", "request_keys",
            "prompt_buckets", "bucket_for", "chunk_buckets",
            "validate_prompt", "Scheduler", "StepPlan", "ChunkTask",

@@ -31,6 +31,54 @@ class CascadeMetrics:
     dropped: int = 0
     wan_bytes: int = 0
     agreement: float = 0.0      # edge-vs-final agreement rate (running)
+    edge_failures: int = 0      # edge attempts that faulted/timed out
+    rerouted: int = 0           # requests failed over edge -> cloud
+
+
+@dataclasses.dataclass
+class CircuitBreaker:
+    """Classic three-state breaker guarding the edge path.
+
+    closed: every request may try the edge. ``failure_threshold``
+    *consecutive* edge failures trip it open (one success resets the
+    count). open: requests go straight to the cloud without touching the
+    edge; after ``cooldown`` denials the breaker goes half-open and lets
+    the next request through as a probe. half-open: the probe's outcome
+    decides — success closes the breaker, failure re-opens it (and
+    restarts the cooldown). Counting in *requests*, not wall-clock,
+    keeps chaos tests deterministic."""
+    failure_threshold: int = 3
+    cooldown: int = 4
+    state: str = "closed"            # closed | open | half_open
+    consecutive_failures: int = 0
+    trips: int = 0                   # closed/half-open -> open transitions
+    _denied: int = 0
+
+    def allow(self) -> bool:
+        """May this request try the edge? (Consumes one cooldown tick
+        while open.)"""
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            self._denied += 1
+            if self._denied >= self.cooldown:
+                self.state = "half_open"
+                return True          # this request is the probe
+            return False
+        return True                  # half-open: probe in flight
+
+    def success(self) -> None:
+        self.consecutive_failures = 0
+        self.state = "closed"
+
+    def failure(self) -> None:
+        self.consecutive_failures += 1
+        if (self.state == "half_open"
+                or self.consecutive_failures >= self.failure_threshold):
+            if self.state != "open":
+                self.trips += 1
+            self.state = "open"
+            self._denied = 0
 
 
 class CascadeEngine:
@@ -70,13 +118,15 @@ class CascadeEngine:
 class CascadeRequest:
     request_id: int
     prompt: np.ndarray
-    route: str = ""                  # accept | escalate | drop
+    route: str = ""                  # accept | escalate | drop | failover
     conf: float = 0.0
     priority: int = 0                # SLO class, forwarded to the routed engine
     deadline_s: Optional[float] = None   # relative to *cascade* submit time
     submit_s: float = 0.0
     output: Optional[np.ndarray] = None
     latency_s: float = 0.0
+    status: str = "queued"           # terminal: done|failed|rejected|cancelled
+    failure_reason: Optional[str] = None
 
 
 class CascadeServingEngine:
@@ -97,12 +147,29 @@ class CascadeServingEngine:
                  chunk_tokens: Optional[int] = None,
                  token_budget: Optional[int] = None,
                  prefix_sharing: bool = True,
-                 max_decode_steps: int = 1):
+                 max_decode_steps: int = 1,
+                 fault_plan=None,
+                 breaker_failure_threshold: int = 3,
+                 breaker_cooldown: int = 4,
+                 admission_policy: Optional[str] = None):
         from repro.serving.engine import ServingEngine
         self.cascade = cascade
         self.max_seq_len = max_seq_len
         self.truncate_prompts = truncate_prompts
         self.metrics = CascadeMetrics()
+        # fault tolerance: the ``edge`` seam of ``fault_plan`` models an
+        # edge-engine outage at the gate; the breaker converts repeated
+        # outages into wholesale cloud failover (no per-request edge
+        # timeout while the edge is known-dead), and ``_degradation_s``
+        # tracks an EWMA of the wall-clock each failed edge attempt burned
+        # — failover deadlines are shrunk by it on top of the ordinary
+        # gate-delay shrink, so the cloud engine sees the SLO budget the
+        # degraded edge path actually left it
+        self._faults = fault_plan
+        self.breaker = CircuitBreaker(
+            failure_threshold=breaker_failure_threshold,
+            cooldown=breaker_cooldown)
+        self._degradation_s = 0.0
         # both engines execute the same scheduler policy (token budget /
         # chunked prefill / prefix sharing / multi-step decode horizons
         # flow straight through); on a weak edge host the decode scan is
@@ -114,7 +181,8 @@ class CascadeServingEngine:
                          num_pool_blocks=num_pool_blocks,
                          chunk_tokens=chunk_tokens, token_budget=token_budget,
                          prefix_sharing=prefix_sharing,
-                         max_decode_steps=max_decode_steps)
+                         max_decode_steps=max_decode_steps,
+                         admission_policy=admission_policy)
         self.edge_engine = ServingEngine(cascade.edge, edge_params,
                                          seed=seed, **engine_kw)
         self.cloud_engine = ServingEngine(cascade.cloud, cloud_params,
@@ -165,9 +233,28 @@ class CascadeServingEngine:
             return None
         return r.deadline_s - (time.perf_counter() - r.submit_s)
 
+    def _failover_deadline(self, r: CascadeRequest) -> Optional[float]:
+        """Deadline forwarded on the edge→cloud failover path: the gate
+        delay already elapsed (``_inner_deadline``) *plus* the observed
+        edge degradation — the EWMA of wall-clock burned per failed edge
+        attempt. The cloud engine's EDF/admission then sees the budget
+        the degraded path actually left, instead of an optimistic one."""
+        d = self._inner_deadline(r)
+        if d is None:
+            return None
+        return d - self._degradation_s
+
     def run(self) -> Dict[int, CascadeRequest]:
-        """Gate every pending request, generate on the routed engine."""
-        from repro.cascade.gate import ACCEPT, DROP, ESCALATE
+        """Gate every pending request, generate on the routed engine.
+
+        The circuit breaker guards the edge attempt: while it is open,
+        requests skip the gate entirely and fail over to the cloud
+        (route "failover") with a deadline shrunk by the observed
+        degradation; an injected edge outage (``FaultPlan`` seam
+        ``edge``) feeds the breaker's failure count, and a half-open
+        probe closes it again once the edge recovers."""
+        from repro.cascade.gate import ACCEPT, ESCALATE
+        from repro.serving.faults import FaultError
         pending, self._requests = self._requests, []
         routed: Dict[int, CascadeRequest] = {}
         edge_ids, cloud_ids = {}, {}
@@ -175,15 +262,41 @@ class CascadeServingEngine:
         from repro.serving.engine import bucket_for
         for r in pending:
             max_new, temp = r._gen
-            bucket = bucket_for(len(r.prompt), self.edge_engine.buckets)
-            tokens = np.zeros((1, bucket), np.int32)
-            tokens[0, :len(r.prompt)] = r.prompt
-            conf, route = self._gate(self._edge_params, jnp.asarray(tokens),
-                                     jnp.int32(len(r.prompt)))
-            r.conf = float(conf)
-            code = int(route)
             m = self.metrics
             m.queries += 1
+            routed[r.request_id] = r
+            conf = route = None
+            if self.breaker.allow():
+                attempt0 = time.perf_counter()
+                try:
+                    if self._faults is not None:
+                        self._faults.check("edge", "edge gate prefill")
+                    bucket = bucket_for(len(r.prompt),
+                                        self.edge_engine.buckets)
+                    tokens = np.zeros((1, bucket), np.int32)
+                    tokens[0, :len(r.prompt)] = r.prompt
+                    conf, route = self._gate(self._edge_params,
+                                             jnp.asarray(tokens),
+                                             jnp.int32(len(r.prompt)))
+                    self.breaker.success()
+                except FaultError:
+                    self.breaker.failure()
+                    m.edge_failures += 1
+                    lost = time.perf_counter() - attempt0
+                    a = 0.25
+                    self._degradation_s = lost if m.edge_failures == 1 \
+                        else (1.0 - a) * self._degradation_s + a * lost
+            if route is None:
+                # breaker open, or this edge attempt failed: cloud failover
+                r.route = "failover"
+                m.rerouted += 1
+                m.wan_bytes += len(r.prompt) * 4 + max_new * 4
+                cloud_ids[self.cloud_engine.submit(
+                    r.prompt, max_new, temp, priority=r.priority,
+                    deadline_s=self._failover_deadline(r))] = r
+                continue
+            r.conf = float(conf)
+            code = int(route)
             if code == int(ESCALATE):
                 r.route = "escalate"
                 m.escalated += 1
@@ -202,12 +315,32 @@ class CascadeServingEngine:
                 r.route = "drop"
                 m.dropped += 1
                 r.output = np.zeros((0,), np.int32)
+                r.status = "done"
                 r.latency_s = time.perf_counter() - t0   # answered at gate
-            routed[r.request_id] = r
         for ids, eng in ((edge_ids, self.edge_engine),
                          (cloud_ids, self.cloud_engine)):
             for rid, served in eng.run().items():
                 if rid in ids:
                     ids[rid].output = served.output
                     ids[rid].latency_s = served.latency_s
+                    ids[rid].status = served.status
+                    ids[rid].failure_reason = served.failure_reason
         return routed
+
+    def engine_metrics(self) -> Dict[str, object]:
+        """Monitoring snapshot across the cascade: routing/WAN counters,
+        breaker state, and both inner engines' ``metrics()``."""
+        m = self.metrics
+        return {
+            "queries": m.queries, "accepted": m.accepted,
+            "escalated": m.escalated, "dropped": m.dropped,
+            "rerouted": m.rerouted, "edge_failures": m.edge_failures,
+            "wan_bytes": m.wan_bytes,
+            "breaker": {"state": self.breaker.state,
+                        "trips": self.breaker.trips,
+                        "consecutive_failures":
+                            self.breaker.consecutive_failures},
+            "degradation_s": self._degradation_s,
+            "edge": self.edge_engine.metrics(),
+            "cloud": self.cloud_engine.metrics(),
+        }

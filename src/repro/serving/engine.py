@@ -69,6 +69,21 @@ saved logits make the first resumed token bit-exact). First-admission
 timing is sticky across preemption, so ``admit_s``/``ttft_s`` keep
 measuring the request's real service experience.
 
+The stack is **chaos-hardened**: with a ``fault_plan``
+(``repro.serving.faults.FaultPlan``) armed, named seams — the decode
+dispatch, both KV-swap directions, pool admission, mid-flight
+cancellation — inject deterministic faults, and recovery reuses the
+preemption machinery: faulted slots roll back to their host checkpoint
+and requeue with bounded step-indexed exponential backoff; a request
+exceeding ``max_retries`` is quarantined with terminal status ``failed``
+instead of wedging the loop. Every request ends in exactly one terminal
+status (``done``/``failed``/``rejected``/``cancelled``) with a
+machine-readable ``failure_reason``; oversized requests are rejected at
+admission rather than raising, ``cancel()`` works in every phase, and
+``metrics()`` snapshots the full health picture for
+``core.monitoring``. Survivors of any fault schedule finish
+token-for-token identical to the fault-free run (``tests/test_faults.py``).
+
 ``DrainBatchEngine`` preserves the previous drain-the-queue batcher (pad
 the batch to its longest prompt, run everyone for the longest budget,
 round-trip logits to the host each token) as the measured baseline for
@@ -86,6 +101,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
+from repro.serving.faults import FaultError, FaultPlan
 from repro.serving.kv_cache import RingLayout, make_backend
 from repro.serving.sampler import (request_keys, sample_logits_batch,
                                    sample_logits_keyed)
@@ -112,6 +128,18 @@ class Request:
     preemptions: int = 0         # times swapped out under SLO pressure
     resume: Optional["_ResumeState"] = dataclasses.field(
         default=None, repr=False)     # checkpoint while preempted
+    # terminal disposition: "queued"/"active" while live, then exactly one
+    # of done | failed (retry budget exhausted) | rejected (admission
+    # refused it) | cancelled. ``failure_reason`` is machine-readable: a
+    # code, optionally ": detail" for humans.
+    status: str = "queued"
+    failure_reason: Optional[str] = None
+    retries: int = 0             # fault-triggered rollbacks so far
+    last_fault: Optional[str] = None  # seam of the most recent fault
+    downgraded: bool = False     # deadline stripped by admission control
+    not_before_step: int = 0     # backoff: ineligible before this step
+    fault_s: float = 0.0         # wall-clock of last fault requeue (recovery
+    #                              latency = next slot grant - fault_s)
 
 
 @dataclasses.dataclass
@@ -180,7 +208,12 @@ class ServingEngine:
                  token_budget: Optional[int] = None,
                  prefix_sharing: bool = True,
                  max_decode_steps: int = 1,
-                 preempt_mode: str = "auto"):
+                 preempt_mode: str = "auto",
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_retries: int = 3,
+                 backoff_base_steps: int = 1,
+                 backoff_cap_steps: int = 8,
+                 admission_policy: Optional[str] = None):
         if lm.cfg.frontend.kind == "audio":
             raise NotImplementedError("engine serves text-token streams")
         self.lm = lm
@@ -223,6 +256,21 @@ class ServingEngine:
         # dispatch count (coalesced: one per decode round with top-ups)
         self.preemptions = 0
         self.lookahead_dispatches = 0
+        # fault tolerance: injected-fault recovery rolls affected slots back
+        # to their last host checkpoint and requeues them with bounded
+        # exponential backoff (measured in engine steps, so recovery is
+        # deterministic under test); a request exceeding ``max_retries``
+        # fault rollbacks is quarantined with terminal status "failed"
+        # instead of wedging the drain loop
+        self._faults = fault_plan
+        self.max_retries = max_retries
+        self.backoff_base_steps = backoff_base_steps
+        self.backoff_cap_steps = backoff_cap_steps
+        self._step_count = 0
+        self.fault_recoveries = 0     # decode rounds rolled back
+        self.retries_total = 0        # per-request retries, summed
+        self.recovery_latencies: List[float] = []  # fault -> re-grant, s
+        self._status_counts = collections.Counter()  # terminal dispositions
 
         if chunk_tokens is not None:
             self._validate_chunk_mixers(chunk_tokens)
@@ -236,7 +284,8 @@ class ServingEngine:
         self.scheduler = Scheduler(batch_slots=batch_slots,
                                    chunk_tokens=chunk_tokens,
                                    token_budget=token_budget,
-                                   max_decode_steps=max_decode_steps)
+                                   max_decode_steps=max_decode_steps,
+                                   admission_policy=admission_policy)
         # prefix sharing hashes prompt tokens at admission; only meaningful
         # with chunked install (monolithic prefill recomputes everything)
         self._admit_with_tokens = (
@@ -313,7 +362,16 @@ class ServingEngine:
         latency-critical: admitted first, given chunk budget first, and
         never preempted by a lower class); ``deadline_s`` orders within a
         class (earliest deadline first, relative to submit time). Both
-        default to the old FIFO behavior."""
+        default to the old FIFO behavior.
+
+        With an ``admission_policy`` set ("reject" | "downgrade"), a
+        deadline-carrying submit is feasibility-checked against the
+        measured per-class service rate and the work ranked ahead of it
+        (see ``Scheduler.deadline_feasible``): an infeasible deadline is
+        either terminally rejected here (status "rejected", reason
+        ``deadline_infeasible`` — still returned from ``run``) or
+        downgraded to best-effort (deadline stripped, ``downgraded``
+        flagged) rather than admitted to miss."""
         prompt = validate_prompt(prompt, max_new_tokens, self.max_seq_len,
                                  self.truncate_prompts)
         rid = self._next_id
@@ -321,6 +379,23 @@ class ServingEngine:
         r = Request(rid, prompt, max_new_tokens, temperature,
                     priority=priority, deadline_s=deadline_s)
         r.submit_s = time.perf_counter()
+        policy = self.scheduler.admission_policy
+        if policy is not None and r.deadline_s is not None:
+            mine = request_rank(r)
+            ahead = (len(self._slots) + len(self._prefilling)
+                     + sum(1 for q in self._queue if request_rank(q) <= mine))
+            if not self.scheduler.deadline_feasible(
+                    deadline_s=r.deadline_s, ahead=ahead,
+                    priority=r.priority):
+                if policy == "reject":
+                    self._terminal(
+                        r, "rejected",
+                        f"deadline_infeasible: {ahead} requests ahead at "
+                        f"the measured class service rate cannot finish "
+                        f"within {r.deadline_s:.3f}s")
+                    return rid
+                r.deadline_s = None          # downgrade: serve best-effort
+                r.downgraded = True
         self._queue.append(r)
         return rid
 
@@ -387,7 +462,16 @@ class ServingEngine:
         then the decode round. Public so drivers can interleave arrivals
         with serving (see ``benchmarks/bench_serving.py``); ``run`` is just
         this in a drain loop."""
+        self._step_count += 1
         slots, free, prefilling = self._slots, self._free, self._prefilling
+        if self._faults is not None and self._faults.fire("cancel"):
+            # chaos cancellation: a deterministic in-flight victim hangs up
+            live = sorted([r.request_id for r in self._queue]
+                          + [pp.request.request_id
+                             for pp in prefilling.values()]
+                          + [r.request_id for r in slots.values()])
+            if live:
+                self.cancel(self._faults.pick("cancel", live))
         min_headroom = min(
             (r.max_new_tokens - self._scanned.get(s, 0)
              for s, r in slots.items()), default=None)
@@ -404,15 +488,20 @@ class ServingEngine:
             self.peak_active_slots = max(self.peak_active_slots,
                                          len(slots) + len(prefilling))
         if slots:
-            self._decode_round(slots, free, self._done, plan.decode_steps)
-        elif not plan.chunks and not prefilling and self._queue:
-            # nothing running and the best-ranked waiting request can
-            # never fit
-            nxt = min(self._queue, key=request_rank)
-            raise RuntimeError(
-                f"request {nxt.request_id} (prompt {len(nxt.prompt)} + "
-                f"budget {nxt.max_new_tokens}) needs more KV blocks than "
-                f"the whole pool holds; enlarge num_pool_blocks")
+            try:
+                self._decode_round(slots, free, self._done,
+                                   plan.decode_steps)
+            except FaultError as e:
+                # the decode dispatch was poisoned *before* touching device
+                # state (launch failure semantics), so every active slot
+                # still holds its pre-round state: roll them all back to a
+                # host checkpoint and requeue with backoff
+                self._recover_decode_fault(e.seam)
+        # a request too big for the whole pool is terminally rejected in
+        # _try_admit; a step where everything waiting is merely backing off
+        # (or transiently starved by an injected pool fault) just advances
+        # the step counter toward backoff expiry — never a wedge, never an
+        # engine-aborting raise
 
     def run(self) -> Dict[int, Request]:
         """Serve until the queue and all slots drain; returns every request
@@ -542,19 +631,55 @@ class ServingEngine:
         request for a whole generation. Chunked admissions return a
         ``PrefillProgress`` (the scheduler plans their chunks); legacy,
         swap-resumed and recompute-resumed-monolithic admissions return
-        MONOLITHIC (nothing left to chunk)."""
-        if not free or not self._queue:
+        MONOLITHIC (nothing left to chunk).
+
+        Requests under fault backoff (``not_before_step``) are skipped
+        until their backoff expires — a retrying request must not block
+        the queue during its own cool-down. Requests that could never fit
+        even in an idle pool (``can_ever_admit``) are terminally rejected
+        here with a machine-readable reason rather than raising: one bad
+        submit never aborts ``run()`` for everyone else."""
+        if not free:
             return None
-        r = min(self._queue, key=request_rank)
+        while True:
+            eligible = [q for q in self._queue
+                        if q.not_before_step <= self._step_count]
+            if not eligible:
+                return None
+            r = min(eligible, key=request_rank)
+            if not self.backend.can_ever_admit(len(r.prompt),
+                                               r.max_new_tokens):
+                self._queue.remove(r)
+                self._terminal(
+                    r, "rejected",
+                    f"exceeds_pool_capacity: prompt {len(r.prompt)} + "
+                    f"budget {r.max_new_tokens} needs more KV blocks than "
+                    f"the whole pool holds; enlarge num_pool_blocks")
+                continue
+            break
+        if self._faults is not None and self._faults.fire("pool"):
+            # transient block-pool exhaustion: admission simply answers
+            # "no blocks" this step and retries on the next one
+            return None
         if r.resume is not None and r.resume.kv is not None:
             # swap path: restore the checkpointed blocks, no prefill at all
             if not self.backend.can_resume(len(r.prompt), r.max_new_tokens):
+                return None
+            if self._faults is not None and self._faults.fire("swap_in"):
+                # the K/V checkpoint failed to restore (fires before the
+                # backend draws blocks, so nothing to unwind): drop it and
+                # fall back to the recompute-resume path — the host
+                # checkpoint (tokens + last logits) rebuilds the cache
+                # exactly, so the stream stays token-for-token identical
+                r.resume.kv = None
+                self._record_retry(r, "swap_in")
                 return None
             self._queue.remove(r)
             slot = free.pop()
             self._cache_state = self.backend.swap_in(
                 self._cache_state, slot, r.resume.kv, len(r.prompt),
                 r.max_new_tokens)
+            self._note_grant(r)
             self._arm_resumed(r, slot, slots)
             return MONOLITHIC
         # fresh admission, or recompute-resume (re-prefill prompt + already
@@ -580,8 +705,7 @@ class ServingEngine:
         self._cache_state = self._begin_fn(
             self._cache_state, jnp.int32(slot), jnp.asarray(table_row),
             jnp.int32(shared_blocks))
-        if r.admit_s == 0.0:               # sticky: resume never restamps
-            r.admit_s = time.perf_counter()
+        self._note_grant(r)
         self.prefill_tokens_total += len(tokens)
         self.prefill_tokens_skipped += start
         pp = PrefillProgress(request=r, slot=slot, next=start,
@@ -637,8 +761,7 @@ class ServingEngine:
             jnp.int32(length), jnp.int32(slot), jnp.int32(r.max_new_tokens),
             jnp.float32(r.temperature), jnp.int32(r.request_id),
             jnp.asarray(table_row))
-        if r.admit_s == 0.0:               # sticky: resume never restamps
-            r.admit_s = time.perf_counter()
+        self._note_grant(r)
         self.prefill_tokens_total += length
         self.planned_token_slots += bucket
         self.useful_prefill_tokens += length
@@ -692,15 +815,17 @@ class ServingEngine:
         self._restore_checkpoint(r, slot)
         slots[slot] = r
 
-    def preempt(self, slot: int) -> None:
-        """Swap the request decoding in ``slot`` out and requeue it. Its
-        decode state (generated tokens, step count, next-sample logits) is
-        checkpointed on the host; its cache either rides along
-        (``PagedCache.swap_out`` — blocks return to the pool) or is
-        rebuilt at resume by re-prefilling prompt + generated tokens
-        (ring / ``preempt_mode='recompute'``). Resumption is token-exact.
-        Called by the scheduler under SLO pressure; public so drivers and
-        tests can force arbitrary preemption schedules."""
+    def _rollback_slot(self, slot: int) -> Request:
+        """Evict ``slot`` back to a host checkpoint — the shared primitive
+        under SLO preemption *and* fault recovery. Decode state (generated
+        tokens, step count, next-sample logits) is checkpointed on the
+        host; the cache either rides along (``PagedCache.swap_out`` —
+        blocks return to the pool) or is rebuilt at resume by
+        re-prefilling prompt + generated tokens (ring /
+        ``preempt_mode='recompute'``). A ``swap_out`` seam fault degrades
+        to the recompute path — strictly slower, never less exact. The
+        caller decides what the eviction *means* (preemption vs retry)
+        and where the request goes next."""
         r = self._slots.pop(slot)
         st = self._state
         steps = int(np.asarray(st["steps"])[slot])   # transfer, no compile
@@ -709,7 +834,12 @@ class ServingEngine:
             tokens=np.array(np.asarray(st["out"])[slot, :steps]),
             last=np.array(np.asarray(st["last"])[slot]))
         self._edit_state(active=(slot, False))
-        if self._preempt_swap:
+        swap = self._preempt_swap
+        if swap and self._faults is not None \
+                and self._faults.fire("swap_out"):
+            r.last_fault = "swap_out"    # checkpoint transport failed:
+            swap = False                 # recompute resume instead (exact)
+        if swap:
             r.resume.kv, self._cache_state = self.backend.swap_out(
                 self._cache_state, slot)
         else:
@@ -717,9 +847,160 @@ class ServingEngine:
                                                        slot)
         self._scanned.pop(slot, None)
         self._free.append(slot)
+        return r
+
+    def preempt(self, slot: int) -> None:
+        """Swap the request decoding in ``slot`` out and requeue it (see
+        ``_rollback_slot``). Resumption is token-exact. Called by the
+        scheduler under SLO pressure; public so drivers and tests can
+        force arbitrary preemption schedules."""
+        r = self._rollback_slot(slot)
         r.preemptions += 1
         self.preemptions += 1
         self._queue.append(r)
+
+    # -- fault tolerance ------------------------------------------------------
+    def _recover_decode_fault(self, seam: str) -> None:
+        """A decode dispatch was poisoned before mutating device state:
+        roll every active slot back to a host checkpoint and requeue with
+        bounded exponential backoff; requests exceeding the retry budget
+        are quarantined (terminal "failed") instead of wedging the loop."""
+        self.fault_recoveries += 1
+        for slot in list(self._slots):
+            r = self._rollback_slot(slot)
+            self._record_retry(r, seam, in_queue=False)
+
+    def _record_retry(self, r: Request, seam: str,
+                      in_queue: bool = True) -> None:
+        """Account one fault-triggered retry for ``r`` and route it:
+        backoff + requeue within budget, quarantine beyond it.
+        ``in_queue`` says whether ``r`` currently sits in the queue (a
+        swap-in fault) or was just rolled out of a slot."""
+        r.retries += 1
+        r.last_fault = seam
+        r.fault_s = time.perf_counter()
+        self.retries_total += 1
+        if r.retries > self.max_retries:
+            if in_queue:
+                self._queue.remove(r)
+            self._quarantine(r, seam)
+            return
+        r.not_before_step = self._step_count + min(
+            self.backoff_cap_steps,
+            self.backoff_base_steps << (r.retries - 1))
+        if not in_queue:
+            self._queue.append(r)
+
+    def _quarantine(self, r: Request, seam: str) -> None:
+        """Terminal failure: the request exhausted its retry budget. Its
+        partial output (tokens generated before the last fault) is kept;
+        its checkpoint (and any host K/V) is dropped."""
+        out = (r.resume.tokens if r.resume is not None
+               else np.zeros((0,), np.int32))
+        r.resume = None
+        self._terminal(
+            r, "failed",
+            f"retry_budget_exhausted: {r.retries} retries > "
+            f"max_retries={self.max_retries} (last fault: {seam})",
+            output=out)
+
+    def _terminal(self, r: Request, status: str, reason: Optional[str],
+                  output: Optional[np.ndarray] = None) -> None:
+        """Move ``r`` to a terminal disposition and into ``_done`` (the
+        caller has already detached it from queue/slots/prefilling).
+        ``output`` defaults to empty so downstream accounting never trips
+        on None."""
+        r.status = status
+        r.failure_reason = reason
+        if r.output is None:
+            r.output = output if output is not None \
+                else np.zeros((0,), np.int32)
+        r.finish_s = time.perf_counter()
+        r.latency_s = r.finish_s - r.submit_s
+        self._status_counts[status] += 1
+        self._done[r.request_id] = r
+
+    def _note_grant(self, r: Request) -> None:
+        """Slot-grant bookkeeping shared by every admission path: sticky
+        first-admission stamp (resume never restamps) and, after a fault
+        requeue, the recovery latency (fault -> re-grant)."""
+        if r.admit_s == 0.0:
+            r.admit_s = time.perf_counter()
+        if r.fault_s:
+            self.recovery_latencies.append(time.perf_counter() - r.fault_s)
+            r.fault_s = 0.0
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel an in-flight request wherever it currently lives —
+        queued (preempted included), mid-prefill, or mid-decode. Its
+        resources (slot, pool blocks) are released immediately, partial
+        output is kept, and it lands in ``run()``'s results with terminal
+        status "cancelled". Returns False when the id isn't in flight
+        (already finished, or never submitted)."""
+        for r in self._queue:
+            if r.request_id == request_id:
+                self._queue.remove(r)
+                out = (r.resume.tokens if r.resume is not None
+                       else np.zeros((0,), np.int32))
+                r.resume = None
+                self._terminal(r, "cancelled", "cancelled: while queued",
+                               output=out)
+                return True
+        for slot, pp in list(self._prefilling.items()):
+            if pp.request.request_id == request_id:
+                del self._prefilling[slot]
+                # the installed chunks are abandoned: blocks return to the
+                # pool, stale cache entries are wiped by the next tenant's
+                # begin_slot
+                self._cache_state = self.backend.free_slot(
+                    self._cache_state, slot)
+                self._free.append(slot)
+                r = pp.request
+                r.resume = None
+                self._terminal(r, "cancelled", "cancelled: mid-prefill")
+                return True
+        for slot, r in list(self._slots.items()):
+            if r.request_id == request_id:
+                self._slots.pop(slot)
+                steps = int(np.asarray(self._state["steps"])[slot])
+                out = np.array(
+                    np.asarray(self._state["out"])[slot, :steps])
+                self._edit_state(active=(slot, False))
+                self._cache_state = self.backend.free_slot(
+                    self._cache_state, slot)
+                self._scanned.pop(slot, None)
+                self._free.append(slot)
+                self._terminal(r, "cancelled", "cancelled: mid-decode",
+                               output=out)
+                return True
+        return False
+
+    def metrics(self) -> Dict[str, object]:
+        """Monitoring snapshot: live/terminal request counts, fault and
+        recovery accounting, and the core serving counters — the payload
+        ``core.monitoring.MonitoringService.record_serving`` ingests."""
+        lat = sorted(self.recovery_latencies)
+
+        def pct(p: float) -> float:
+            return lat[min(len(lat) - 1, int(p * len(lat)))] if lat else 0.0
+
+        return {
+            "live": {"queued": len(self._queue),
+                     "prefilling": len(self._prefilling),
+                     "decoding": len(self._slots)},
+            "terminal": dict(self._status_counts),
+            "quarantined": self._status_counts.get("failed", 0),
+            "retries_total": self.retries_total,
+            "fault_recoveries": self.fault_recoveries,
+            "faults_injected": (self._faults.fired()
+                                if self._faults is not None else {}),
+            "recovery": {"count": len(lat), "p50_s": pct(0.50),
+                         "p99_s": pct(0.99)},
+            "preemptions": self.preemptions,
+            "generated_tokens": self.generated_tokens,
+            "host_syncs": self.host_syncs,
+            "occupancy": self.occupancy(),
+        }
 
     def _try_preempt(self, slots) -> bool:
         """Scheduler preemption callback: when the best-ranked waiting
@@ -791,6 +1072,14 @@ class ServingEngine:
         if not slots:
             return
         self._reserve_lookahead(slots, k)
+        if self._faults is not None:
+            # a poisoned dispatch fails at launch, before the donated
+            # buffers are touched — device state is intact, which is what
+            # lets _recover_decode_fault checkpoint from it (the look-ahead
+            # reservation above already landed; rollback returns it through
+            # the ordinary free/swap path)
+            self._faults.check("scan" if k > 1 else "step",
+                               f"decode round over {len(slots)} slots")
         if k == 1:
             self._cache_state, self._state = self._step_fn(
                 self.params, self._cache_state, self._state, self._base_key)
@@ -815,9 +1104,13 @@ class ServingEngine:
             self._scanned.pop(slot, None)
             n = int(self._state["steps"][slot])
             r.output = np.asarray(self._state["out"][slot, :n])
+            r.status = "done"
             r.finish_s = time.perf_counter()
             r.latency_s = r.finish_s - r.submit_s
             self.generated_tokens += n
+            self._status_counts["done"] += 1
+            self.scheduler.observe_service(r.priority,
+                                           r.finish_s - r.admit_s)
             self._cache_state = self.backend.free_slot(self._cache_state,
                                                        slot)
             free.append(slot)
@@ -938,6 +1231,7 @@ class DrainBatchEngine:
         finish = time.perf_counter()
         for i, r in enumerate(requests):
             r.output = outs[i, :r.max_new_tokens]
+            r.status = "done"
             r.finish_s = finish
             r.latency_s = finish - r.submit_s
             self.generated_tokens += r.max_new_tokens

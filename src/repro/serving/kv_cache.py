@@ -242,6 +242,13 @@ class KVCacheBackend:
         prefix-aware accounting in sharing backends)."""
         raise NotImplementedError
 
+    def can_ever_admit(self, prompt_len: int, max_new: int) -> bool:
+        """Whether the request could fit with the backend completely idle
+        (the *capacity* test, vs ``can_admit``'s availability test). False
+        means waiting can never help: the engine terminally rejects the
+        request instead of letting it block the queue forever."""
+        return True
+
     def alloc_slot(self, slot: int, prompt, max_new: int) -> np.ndarray:
         """Host-side reservation; returns the slot's block-table row (a
         dummy for backends without tables). ``prompt`` is a length or the
@@ -592,6 +599,10 @@ class PagedCache(KVCacheBackend):
     def can_admit(self, prompt, max_new: int) -> bool:
         _, shared, fresh_worst, _ = self._plan(prompt, max_new)
         return fresh_worst + self._revivals(shared) <= self._available()
+
+    def can_ever_admit(self, prompt_len: int, max_new: int) -> bool:
+        # block 0 is the trash block: usable pool is num_blocks - 1
+        return self.blocks_needed(prompt_len, max_new) <= self.num_blocks - 1
 
     def _take_free(self, n: int, exclude=()) -> List[int]:
         """Draw ``n`` blocks: plain free blocks first, then retained

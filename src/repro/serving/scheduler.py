@@ -164,13 +164,31 @@ class Scheduler:
     ``max_decode_steps`` enables multi-step decode: each pure-decode step
     may scan up to that many fused decode steps per host sync (see
     ``StepPlan.decode_steps`` and ``_decode_horizon``).
+
+    ``admission_policy`` enables submit-time deadline-feasibility control:
+    the engine reports completed requests' service times per class
+    (``observe_service``, an EWMA), and a deadline-carrying submit is
+    checked against the measured rate and the work ranked ahead of it
+    (``deadline_feasible``). "reject" turns an infeasible submit into a
+    terminal rejection, "downgrade" strips its deadline (best-effort
+    within its class); ``None`` (default) admits everything, exactly the
+    old behavior.
     """
 
     def __init__(self, *, batch_slots: int, chunk_tokens: Optional[int] = None,
                  token_budget: Optional[int] = None, min_bucket: int = 8,
-                 max_decode_steps: int = 1):
+                 max_decode_steps: int = 1,
+                 admission_policy: Optional[str] = None,
+                 service_ewma_alpha: float = 0.25):
         self.batch_slots = batch_slots
         self.chunk_tokens = chunk_tokens
+        if admission_policy not in (None, "reject", "downgrade"):
+            raise ValueError(
+                f"admission_policy must be None, 'reject' or 'downgrade' "
+                f"(got {admission_policy!r})")
+        self.admission_policy = admission_policy
+        self._ewma_alpha = service_ewma_alpha
+        self._service_s: dict = {}      # priority class -> EWMA service s
         if max_decode_steps < 1:
             raise ValueError(
                 f"max_decode_steps must be >= 1 (got {max_decode_steps})")
@@ -203,6 +221,42 @@ class Scheduler:
     @property
     def chunked(self) -> bool:
         return self.chunk_tokens is not None
+
+    # -- deadline-feasibility admission control -------------------------------
+    def observe_service(self, priority: int, service_s: float) -> None:
+        """Fold one completed request's service time (first slot grant →
+        finish) into its class's EWMA. The engine calls this at every
+        completion; the estimate then prices future admissions."""
+        prev = self._service_s.get(priority)
+        a = self._ewma_alpha
+        self._service_s[priority] = service_s if prev is None \
+            else (1.0 - a) * prev + a * service_s
+
+    def service_estimate(self, priority: int) -> Optional[float]:
+        """Expected service seconds for one request of ``priority``:
+        the class EWMA, falling back to the mean across observed classes
+        (a new class is better priced by neighbors than not at all), or
+        None before any completion (cold start: admission cannot judge,
+        so it admits)."""
+        if priority in self._service_s:
+            return self._service_s[priority]
+        if self._service_s:
+            return sum(self._service_s.values()) / len(self._service_s)
+        return None
+
+    def deadline_feasible(self, *, deadline_s: float, ahead: int,
+                          priority: int) -> bool:
+        """Whether a submit with ``deadline_s`` can plausibly meet it:
+        ``ahead`` requests (active + queued at better-or-equal rank) must
+        drain through ``batch_slots`` concurrent slots at the measured
+        class service rate before this one finishes. Deliberately
+        first-order — the point is refusing submits that are *hopeless*
+        at the observed rate, not shaving the marginal ones."""
+        s = self.service_estimate(priority)
+        if s is None:
+            return True
+        wait = ahead * s / self.batch_slots
+        return wait + s <= deadline_s
 
     def _decode_horizon(self, busy_prefill: bool,
                         min_headroom: Optional[int]) -> int:

@@ -1,0 +1,502 @@
+"""Chaos recovery: injected faults must never cost correctness.
+
+The contract under test (ISSUE 6): with a seeded ``FaultPlan`` tripping
+the serving stack's named seams — poisoned decode dispatches, failed KV
+swaps, transient pool exhaustion, mid-flight cancellation, edge outage at
+the cascade gate — every request that *survives* the chaos schedule
+finishes token-for-token identical to the fault-free run, the paged
+allocator's invariants hold after every recovery, the free list is full
+after every drain (no block leaks), and the engine never livelocks
+(quarantine bounds retries; backoff is measured in engine steps). The
+cascade's circuit breaker must demonstrably reroute edge→cloud during an
+outage and close again on a successful half-open probe.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, dense_stages
+from repro.models.model import LM
+from repro.serving import (CircuitBreaker, FaultError, FaultPlan,
+                           ServingEngine)
+
+
+def _tiny_cfg(layers=2, window=None):
+    return ModelConfig(
+        name="tiny", family="dense", source="t", num_layers=layers,
+        d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        vocab_size=64, stages=dense_stages(layers, window=window),
+        param_dtype="float32")
+
+
+def _lm(cfg):
+    lm = LM(cfg, kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    return lm, params
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return _lm(_tiny_cfg())
+
+
+def _mixed_trace(n=6, seed=1, budgets=(3, 12)):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 60, size=int(rng.integers(3, 12))),
+             int(rng.integers(*budgets))) for _ in range(n)]
+
+
+# engine configurations the chaos sweep covers: recompute resume on the
+# ring, swap resume and recompute resume on the paged pool, multi-step
+# decode (the scan seam), and chunked prefill (mid-prefill state)
+CONFIGS = {
+    "ring_recompute": dict(cache_backend="ring"),
+    "paged_swap": dict(cache_backend="paged", block_size=8,
+                       num_pool_blocks=28),
+    "paged_recompute": dict(cache_backend="paged", block_size=8,
+                            num_pool_blocks=28, preempt_mode="recompute"),
+    "paged_multistep": dict(cache_backend="paged", block_size=8,
+                            num_pool_blocks=28, max_decode_steps=4),
+    "paged_chunked": dict(cache_backend="paged", block_size=8,
+                          num_pool_blocks=28, chunk_tokens=8),
+}
+
+
+def _serve(tiny, *, fault_plan=None, trace=None, temperature=0.7,
+           max_steps=2000, **kw):
+    """Run a trace to completion; assert allocator invariants after every
+    step and bound the step count (the no-livelock guard)."""
+    lm, params = tiny
+    eng = ServingEngine(lm, params, batch_slots=3, max_seq_len=64,
+                        min_bucket=4, fault_plan=fault_plan, **kw)
+    for prompt, budget in (trace or _mixed_trace()):
+        eng.submit(prompt, budget, temperature=temperature)
+    steps = 0
+    while eng.pending:
+        eng.step()
+        steps += 1
+        assert steps <= max_steps, "engine livelocked under chaos"
+        if hasattr(eng.backend, "assert_invariants"):
+            eng.backend.assert_invariants()
+    done = eng._done.copy()
+    eng._done.clear()
+    return eng, done
+
+
+def _assert_drained_clean(eng):
+    assert sorted(eng._free) == list(range(eng.batch_slots))
+    be = eng.backend
+    if hasattr(be, "assert_invariants"):
+        be.assert_invariants()
+        assert be._gap_total == 0 and be._ref == {}
+
+
+def _assert_survivors_exact(done, baseline):
+    survivors = {rid: r for rid, r in done.items() if r.status == "done"}
+    assert survivors, "chaos killed every request — schedule too harsh"
+    for rid, r in survivors.items():
+        np.testing.assert_array_equal(r.output, baseline[rid].output)
+    return survivors
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan (no engine, no device)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_is_deterministic_per_seed():
+    def schedule(seed):
+        plan = FaultPlan(seed=seed, step={"prob": 0.3, "max_fires": 5},
+                         swap_in=[1, 4])
+        return [plan.fire("step") for _ in range(40)] \
+            + [plan.fire("swap_in") for _ in range(6)]
+
+    assert schedule(7) == schedule(7)
+    assert schedule(7) != schedule(8)
+
+
+def test_fault_plan_explicit_indices_and_bounds():
+    plan = FaultPlan(seed=0, swap_in=[1, 3], step={"prob": 1.0,
+                                                   "max_fires": 2})
+    assert [plan.fire("swap_in") for i in range(5)] == [
+        False, True, False, True, False]
+    assert [plan.fire("step") for _ in range(5)] == [
+        True, True, False, False, False]      # capped at max_fires
+    assert plan.fired("step") == 2 and plan.fired("swap_in") == 2
+    assert plan.total_fired() == 4
+    assert plan.log == [("swap_in", 1), ("swap_in", 3),
+                        ("step", 0), ("step", 1)]
+    # unknown seams never fire but still count opportunities
+    assert plan.fire("nonexistent") is False
+    assert plan.opportunities("nonexistent") == 1
+
+
+def test_fault_plan_check_raises_with_seam():
+    plan = FaultPlan(seed=0, scan=1.0)
+    with pytest.raises(FaultError, match="scan") as e:
+        plan.check("scan", "decode round")
+    assert e.value.seam == "scan"
+    plan.check("step")                        # unconfigured seam: no-op
+
+
+def test_fault_plan_pick_is_deterministic():
+    a = FaultPlan(seed=5)
+    b = FaultPlan(seed=5)
+    items = list(range(10))
+    assert [a.pick("cancel", items) for _ in range(8)] == \
+        [b.pick("cancel", items) for _ in range(8)]
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker state machine (no engine)
+# ---------------------------------------------------------------------------
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(failure_threshold=2, cooldown=2)
+    assert br.allow() and br.state == "closed"
+    br.failure()
+    assert br.state == "closed"               # one failure: still closed
+    br.failure()
+    assert br.state == "open" and br.trips == 1
+    assert not br.allow()                     # cooldown tick 1: denied
+    assert br.allow() and br.state == "half_open"   # tick 2: the probe
+    br.failure()                              # probe failed: re-open
+    assert br.state == "open" and br.trips == 2
+    assert not br.allow()
+    assert br.allow() and br.state == "half_open"
+    br.success()                              # probe succeeded: closed
+    assert br.state == "closed" and br.consecutive_failures == 0
+    br.failure()
+    br.success()                              # success resets the count
+    br.failure()
+    assert br.state == "closed"
+
+
+# ---------------------------------------------------------------------------
+# Engine chaos recovery
+# ---------------------------------------------------------------------------
+
+def test_step_fault_rolls_back_and_stays_exact(tiny):
+    """A poisoned decode dispatch rolls every active slot back to a host
+    checkpoint and requeues; survivors finish token-for-token identical
+    to the fault-free run, with no block leak."""
+    _, base = _serve(tiny, **CONFIGS["paged_swap"])
+    plan = FaultPlan(seed=3, step=[2, 5, 9])
+    eng, done = _serve(tiny, fault_plan=plan, max_retries=5,
+                       **CONFIGS["paged_swap"])
+    assert plan.fired("step") == 3
+    assert eng.fault_recoveries == 3 and eng.retries_total > 0
+    assert all(r.status == "done" for r in done.values())
+    _assert_survivors_exact(done, base)
+    _assert_drained_clean(eng)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_chaos_schedule_survivors_exact(tiny, name):
+    """The full mixed schedule — step/scan faults, swap_out and swap_in
+    faults, transient pool exhaustion — across every backend config:
+    survivors exact, invariants after every step, clean drain."""
+    kw = CONFIGS[name]
+    _, base = _serve(tiny, trace=_mixed_trace(8, seed=2), **kw)
+    plan = FaultPlan(seed=11,
+                     step={"prob": 0.15, "max_fires": 4},
+                     scan={"prob": 0.3, "max_fires": 2},
+                     swap_out={"prob": 0.4, "max_fires": 2},
+                     swap_in={"prob": 0.4, "max_fires": 2},
+                     pool={"prob": 0.1, "max_fires": 3})
+    eng, done = _serve(tiny, fault_plan=plan, trace=_mixed_trace(8, seed=2),
+                       max_retries=6, **kw)
+    assert plan.total_fired() > 0
+    assert len(done) == 8                    # nobody wedged or lost
+    _assert_survivors_exact(done, base)
+    _assert_drained_clean(eng)
+
+
+def test_swap_in_fault_falls_back_to_recompute(tiny):
+    """A failed swap-in mid-resume drops the K/V checkpoint and resumes
+    via recompute — same tokens, one retry recorded."""
+    lm, params = tiny
+    kw = dict(batch_slots=2, max_seq_len=64, min_bucket=4,
+              cache_backend="paged", block_size=8, num_pool_blocks=24)
+    base = ServingEngine(lm, params, **kw)
+    rid0 = base.submit(np.arange(6), 10, temperature=0.5)
+    expected = base.run()[rid0].output
+
+    plan = FaultPlan(seed=0, swap_in=[0])    # first swap-in attempt fails
+    eng = ServingEngine(lm, params, fault_plan=plan, **kw)
+    rid = eng.submit(np.arange(6), 10, temperature=0.5)
+    eng.step()
+    eng.step()
+    eng.preempt(next(iter(eng._slots)))      # swap path: checkpoint has kv
+    r = eng._queue[0]
+    assert r.resume is not None and r.resume.kv is not None
+    done = eng.run()
+    assert plan.fired("swap_in") == 1
+    assert done[rid].status == "done"
+    assert done[rid].retries == 1 and done[rid].last_fault == "swap_in"
+    np.testing.assert_array_equal(done[rid].output, expected)
+    _assert_drained_clean(eng)
+
+
+def test_swap_out_fault_degrades_to_recompute(tiny):
+    """A failed swap-out during preemption keeps the host checkpoint and
+    frees the blocks instead — resume recomputes, output unchanged."""
+    lm, params = tiny
+    kw = dict(batch_slots=2, max_seq_len=64, min_bucket=4,
+              cache_backend="paged", block_size=8, num_pool_blocks=24)
+    base = ServingEngine(lm, params, **kw)
+    rid0 = base.submit(np.arange(6), 10, temperature=0.5)
+    expected = base.run()[rid0].output
+
+    plan = FaultPlan(seed=0, swap_out=[0])
+    eng = ServingEngine(lm, params, fault_plan=plan, **kw)
+    rid = eng.submit(np.arange(6), 10, temperature=0.5)
+    eng.step()
+    eng.step()
+    eng.preempt(next(iter(eng._slots)))
+    r = eng._queue[0]
+    assert r.resume is not None and r.resume.kv is None   # degraded path
+    assert r.last_fault == "swap_out"
+    done = eng.run()
+    assert done[rid].status == "done"
+    np.testing.assert_array_equal(done[rid].output, expected)
+    _assert_drained_clean(eng)
+
+
+def test_transient_pool_exhaustion_only_delays(tiny):
+    """The pool seam makes admission answer "no blocks" for a few steps;
+    everything still completes exactly."""
+    _, base = _serve(tiny, **CONFIGS["paged_swap"])
+    plan = FaultPlan(seed=0, pool=[0, 1, 2, 3])
+    eng, done = _serve(tiny, fault_plan=plan, **CONFIGS["paged_swap"])
+    assert plan.fired("pool") == 4
+    assert all(r.status == "done" for r in done.values())
+    _assert_survivors_exact(done, base)
+    _assert_drained_clean(eng)
+
+
+def test_retry_budget_quarantines_instead_of_wedging(tiny):
+    """Unbounded step poisoning: every request exhausts its retry budget
+    and lands terminally "failed" — the drain loop exits, resources come
+    back, reasons are machine-readable."""
+    plan = FaultPlan(seed=0, step=1.0)        # every decode round fails
+    eng, done = _serve(tiny, fault_plan=plan, max_retries=2,
+                       **CONFIGS["paged_swap"])
+    assert done and all(r.status == "failed" for r in done.values())
+    for r in done.values():
+        assert r.failure_reason.startswith("retry_budget_exhausted")
+        assert r.retries == 3 and r.last_fault == "step"
+    assert eng.metrics()["quarantined"] == len(done)
+    _assert_drained_clean(eng)
+
+
+def test_cancellation_mid_prefill_and_mid_decode(tiny):
+    """cancel() frees the victim's slot/blocks wherever it is; everyone
+    else finishes exactly as in the undisturbed run."""
+    lm, params = tiny
+    kw = dict(batch_slots=3, max_seq_len=64, min_bucket=4,
+              cache_backend="paged", block_size=8, num_pool_blocks=28,
+              chunk_tokens=4, token_budget=7)
+    trace = _mixed_trace(5, seed=4, budgets=(6, 12))
+    base = ServingEngine(lm, params, **kw)
+    base_ids = [base.submit(p, b, temperature=0.3) for p, b in trace]
+    base_done = base.run()
+
+    eng = ServingEngine(lm, params, **kw)
+    ids = [eng.submit(p, b, temperature=0.3) for p, b in trace]
+    eng.step()                                # victim 0 is mid-prefill or
+    pf = list(eng._prefilling.values())       # just armed
+    mid_prefill = pf[0].request.request_id if pf else None
+    if mid_prefill is not None:
+        assert eng.cancel(mid_prefill)
+    for _ in range(3):
+        eng.step()
+    mid_decode = next((r.request_id for r in eng._slots.values()), None)
+    if mid_decode is not None:
+        assert eng.cancel(mid_decode)
+    done = eng.run()
+    assert not eng.cancel(12345)              # unknown id
+    cancelled = {rid for rid, r in done.items() if r.status == "cancelled"}
+    assert cancelled == {x for x in (mid_prefill, mid_decode)
+                         if x is not None}
+    for rid in ids:
+        if rid in cancelled:
+            continue
+        assert done[rid].status == "done"
+        np.testing.assert_array_equal(done[rid].output,
+                                      base_done[rid].output)
+    _assert_drained_clean(eng)
+
+
+def test_injected_cancellation_is_deterministic(tiny):
+    """The cancel seam picks the same victims for the same seed."""
+    def victims(seed):
+        plan = FaultPlan(seed=seed, cancel=[1, 3])
+        _, done = _serve(tiny, fault_plan=plan, **CONFIGS["paged_swap"])
+        return sorted(rid for rid, r in done.items()
+                      if r.status == "cancelled")
+
+    v = victims(9)
+    assert v == victims(9) and len(v) == 2
+
+
+def test_oversized_request_is_rejected_not_fatal(tiny):
+    """Satellite 1: the pool-capacity raise is now a per-request terminal
+    rejection — neighbors drain normally (also covered from the SLO side
+    in test_slo_scheduling)."""
+    lm, params = tiny
+    eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=64,
+                        min_bucket=4, cache_backend="paged", block_size=8,
+                        num_pool_blocks=6)           # 5 usable
+    ok1 = eng.submit(np.arange(5), 5)
+    big = eng.submit(np.arange(30), 20, priority=9)  # 7 blocks > 5: never
+    ok2 = eng.submit(np.arange(4), 4)
+    done = eng.run()
+    assert done[big].status == "rejected"
+    assert done[big].failure_reason.startswith("exceeds_pool_capacity")
+    assert len(done[big].output) == 0
+    assert done[ok1].status == "done" and done[ok2].status == "done"
+    _assert_drained_clean(eng)
+
+
+def test_deadline_admission_reject_and_downgrade(tiny):
+    """Submit-time feasibility: once the class service rate is measured,
+    a hopeless deadline is rejected (policy "reject") or stripped
+    (policy "downgrade"); feasible deadlines admit normally."""
+    lm, params = tiny
+    for policy in ("reject", "downgrade"):
+        eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=64,
+                            min_bucket=4, admission_policy=policy)
+        for _ in range(3):                    # train the estimator
+            eng.submit(np.arange(6), 6)
+        eng.run()
+        est = eng.scheduler.service_estimate(0)
+        assert est is not None and est > 0
+        for _ in range(4):                    # saturation
+            eng.submit(np.arange(6), 6)
+        tight = eng.submit(np.arange(6), 6, deadline_s=est * 1e-3)
+        loose = eng.submit(np.arange(6), 6, deadline_s=600.0)
+        if policy == "reject":
+            done = eng.run()
+            assert done[tight].status == "rejected"
+            assert done[tight].failure_reason.startswith(
+                "deadline_infeasible")
+        else:
+            r = next(q for q in eng._queue if q.request_id == tight)
+            assert r.downgraded and r.deadline_s is None
+            done = eng.run()
+            assert done[tight].status == "done"
+        assert done[loose].status == "done"
+
+
+def test_metrics_snapshot_and_monitoring_wiring(tiny):
+    """metrics() summarizes dispositions/faults; MonitoringService
+    ingests and returns the latest snapshot per component."""
+    from repro.core.monitoring import MonitoringService
+    plan = FaultPlan(seed=3, step=[1])
+    eng, done = _serve(tiny, fault_plan=plan, **CONFIGS["paged_swap"])
+    snap = eng.metrics()
+    assert snap["terminal"]["done"] == len(done)
+    assert snap["faults_injected"] == {"step": 1}
+    assert snap["fault_recoveries"] == 1
+    assert snap["recovery"]["count"] >= 1
+    assert snap["recovery"]["p99_s"] >= snap["recovery"]["p50_s"] >= 0.0
+    assert snap["live"] == {"queued": 0, "prefilling": 0, "decoding": 0}
+    mon = MonitoringService()
+    mon.record_serving("edge-engine", snap)
+    assert mon.serving_snapshot("edge-engine") == snap
+    assert mon.serving_snapshot("nope") is None
+
+
+# ---------------------------------------------------------------------------
+# Cascade: edge outage -> circuit breaking -> cloud failover
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cascade_breaker_reroutes_edge_to_cloud(tiny):
+    """Edge outage mid-cascade: consecutive gate failures trip the
+    breaker open, requests fail over to the cloud engine (route
+    "failover", deadline shrunk by observed degradation), and a
+    successful half-open probe closes the breaker once the outage ends.
+    Acceptance: >= 1 request demonstrably rerouted edge->cloud."""
+    from repro.cascade.ecc_infer import CascadeLM, edge_variant
+    from repro.cascade.gate import make_thresholds
+    from repro.serving import CascadeServingEngine
+    cloud_cfg = _tiny_cfg()
+    edge_cfg = edge_variant(cloud_cfg, layers=1)
+    cloud, edge = LM(cloud_cfg, kv_chunk=8), LM(edge_cfg, kv_chunk=8)
+    cp, _ = cloud.init(jax.random.PRNGKey(0))
+    ep, _ = edge.init(jax.random.PRNGKey(1))
+    cascade = CascadeLM(edge, cloud,
+                        thresholds=make_thresholds(hi=0.01, lo=0.001))
+    plan = FaultPlan(seed=0, edge=[0, 1, 2])  # outage spans 3 attempts
+    eng = CascadeServingEngine(cascade, ep, cp, batch_slots=2,
+                               max_seq_len=32, fault_plan=plan,
+                               breaker_failure_threshold=2,
+                               breaker_cooldown=2)
+    rng = np.random.default_rng(0)
+    ids = [eng.submit(rng.integers(0, 60, size=4 + i), max_new_tokens=3,
+                      deadline_s=30.0) for i in range(8)]
+    done = eng.run()
+    m = eng.metrics
+    assert m.edge_failures >= 2
+    assert m.rerouted >= 1                    # the acceptance criterion
+    assert eng.breaker.trips >= 1
+    assert eng.breaker.state == "closed"      # probe closed it post-outage
+    routes = {done[rid].route for rid in ids}
+    assert "failover" in routes
+    assert routes & {"accept", "escalate", "drop"}   # edge recovered
+    for rid in ids:
+        r = done[rid]
+        assert r.status == "done"
+        assert len(r.output) == (0 if r.route == "drop" else 3)
+    # failover generations are the cloud engine's: token-exact vs a
+    # direct cloud run of the same prompt
+    ref = ServingEngine(cloud, cp, batch_slots=2, max_seq_len=32, seed=1)
+    for rid in ids:
+        if done[rid].route != "failover":
+            continue
+        rr = ref.submit(done[rid].prompt, 3)
+        np.testing.assert_array_equal(ref.run()[rr].output,
+                                      done[rid].output)
+    snap = eng.engine_metrics()
+    assert snap["breaker"]["trips"] == eng.breaker.trips
+    assert snap["rerouted"] == m.rerouted
+
+
+# ---------------------------------------------------------------------------
+# Network link faults (sim-level WAN chaos)
+# ---------------------------------------------------------------------------
+
+def test_link_wan_spike_and_outage_deterministic():
+    from repro.core.network import Link
+    from repro.core.sim import SimClock
+
+    def arrivals(seed):
+        clock = SimClock()
+        plan = FaultPlan(seed=seed, wan_spike=[1], wan_outage=[2])
+        link = Link(bandwidth_mbps=8.0, delay_s=0.05, fault_plan=plan,
+                    spike_s=0.25, outage_s=1.0)
+        return [link.transfer(clock, 100_000) for _ in range(4)], link
+
+    (a, link), (b, _) = arrivals(0), arrivals(0)
+    assert a == b                             # deterministic schedule
+    tx = 100_000 * 8 / (8.0 * 1e6)            # 0.1 s serialized per transfer
+    assert a[0] == pytest.approx(tx + 0.05)
+    assert a[1] == pytest.approx(2 * tx + 0.05 + 0.25)      # spike
+    assert a[2] == pytest.approx(3 * tx + 0.05 + 1.0)       # outage shifts
+    assert a[3] == pytest.approx(4 * tx + 0.05 + 1.0)       # ...the queue
+    assert link.spikes == 1 and link.outages == 1
+
+
+def test_network_model_threads_fault_plan_to_wan_links_only():
+    from repro.core.ids import ClusterId, InfraId
+    from repro.core.network import NetworkModel
+    from repro.core.sim import SimClock
+    plan = FaultPlan(seed=0, wan_outage=1.0)
+    net = NetworkModel(SimClock(), wan_delay_s=0.05, fault_plan=plan)
+    infra = InfraId(0)
+    ec = ClusterId(infra, "ec", 0)
+    cc = ClusterId(infra, "cc", 0)
+    assert net.link(ec, cc).fault_plan is plan        # WAN: chaos applies
+    assert net.link(ec, ec).fault_plan is None        # LAN: exempt

@@ -448,14 +448,19 @@ def test_paged_engine_matches_ring_mla():
         np.testing.assert_array_equal(ring[rid], paged[rid])
 
 
-def test_pool_too_small_for_single_request_raises():
+def test_pool_too_small_for_single_request_rejects():
+    # a request whose worst case exceeds the whole pool is terminally
+    # rejected at admission (machine-readable reason) instead of raising
+    # and taking every other request down with it
     lm, params = _lm(_tiny_cfg())
     eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
                         min_bucket=4, cache_backend="paged", block_size=8,
                         num_pool_blocks=3)
-    eng.submit(np.arange(20, dtype=np.int32), max_new_tokens=8)
-    with pytest.raises(RuntimeError, match="KV blocks"):
-        eng.run()
+    rid = eng.submit(np.arange(20, dtype=np.int32), max_new_tokens=8)
+    done = eng.run()
+    assert done[rid].status == "rejected"
+    assert done[rid].failure_reason.startswith("exceeds_pool_capacity")
+    assert len(done[rid].output) == 0
 
 
 def test_unknown_backend_rejected():

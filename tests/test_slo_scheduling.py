@@ -227,18 +227,22 @@ def test_batched_lookahead_coalesces_dispatches(tiny):
 def test_infeasible_request_never_triggers_eviction_storm(tiny):
     """A high-priority request whose worst case exceeds the whole pool can
     never admit: it must not evict the active lower-class work one swap at
-    a time before the engine raises."""
+    a time — it is terminally rejected (machine-readable reason) and
+    everyone else completes normally; one bad submit never aborts
+    ``run()``."""
     lm, params = tiny
     eng = ServingEngine(lm, params, batch_slots=2, max_seq_len=32,
                         min_bucket=4, cache_backend="paged", block_size=8,
                         num_pool_blocks=4)          # 3 usable blocks
-    eng.submit(np.arange(4), max_new_tokens=8)      # fits: 2 blocks
+    ok = eng.submit(np.arange(4), max_new_tokens=8)  # fits: 2 blocks
     eng.step()
-    eng.submit(np.arange(8), max_new_tokens=24, priority=5)  # needs 4 > 3
-    with pytest.raises(RuntimeError, match="whole pool"):
-        while eng.pending:
-            eng.step()
+    big = eng.submit(np.arange(8), max_new_tokens=24, priority=5)  # 4 > 3
+    done = eng.run()
     assert eng.preemptions == 0                     # nobody was evicted
+    assert done[ok].status == "done" and len(done[ok].output) == 8
+    assert done[big].status == "rejected"
+    assert done[big].failure_reason.startswith("exceeds_pool_capacity")
+    eng.backend.assert_invariants()
 
 
 def test_preempt_refused_when_recovery_cannot_cover_demand(tiny):
