@@ -43,6 +43,28 @@ class MonitoringService(EventLog):
         evs = self.query("serving_metrics", component=component)
         return evs[-1]["snapshot"] if evs else None
 
+    def deadline_hit_rates(self, component: str) -> Optional[Dict]:
+        """Per-class deadline-hit rates from the latest serving snapshot:
+        ``{priority: {"hits", "total", "rate"}}`` — the feedback signal
+        closing the loop on deadline-feasibility admission (does the
+        estimator's 'feasible' actually finish in time?). For cascade
+        snapshots the inner engines' tables are merged."""
+        snap = self.serving_snapshot(component)
+        if snap is None:
+            return None
+        if "deadline_hits" in snap:
+            return snap["deadline_hits"]
+        merged: Dict = {}
+        for side in ("edge", "cloud"):
+            for p, row in snap.get(side, {}).get("deadline_hits",
+                                                 {}).items():
+                m = merged.setdefault(p, {"hits": 0, "total": 0})
+                m["hits"] += row["hits"]
+                m["total"] += row["total"]
+        for m in merged.values():
+            m["rate"] = m["hits"] / m["total"] if m["total"] else 0.0
+        return merged or None
+
     def component_status(self) -> Dict[str, str]:
         status: Dict[str, str] = {}
         for ev in self.events:

@@ -1,21 +1,91 @@
-"""Production serving launcher: batched decode against a KV cache under the
-production sharding rules, or the ACE cascade with --cascade.
+"""Production serving launcher: open-loop traffic through the async
+gateway — streamed tokens, backpressure, SLO classes — on the dense
+engine or the ACE edge/cloud cascade with --cascade.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced
-    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --cascade
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --cascade
+    PYTHONPATH=src python -m repro.launch.serve --rate 40 --policy shed
+
+Arrivals are an open-loop Poisson process (``--rate`` req/s, independent
+of service rate), each request streamed as its tokens land; under
+``--rate`` beyond capacity the gateway's bounded queue and backpressure
+policy decide who waits, who is shed, and who is refused.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 
 import jax
 import numpy as np
 
 from repro.cascade.ecc_infer import CascadeLM, edge_variant
+from repro.cascade.gate import make_thresholds
 from repro.configs import get_config
-from repro.launch.mesh import make_host_mesh
 from repro.models.model import LM
-from repro.serving import CascadeEngine, ServingEngine
+from repro.serving import CascadeServingEngine, ServingEngine, ServingGateway
+
+
+def _build_engine(cfg, args):
+    if args.cascade:
+        edge_cfg = edge_variant(cfg, layers=1)
+        cloud, edge = LM(cfg, kv_chunk=32), LM(edge_cfg, kv_chunk=32)
+        cp, _ = cloud.init(jax.random.PRNGKey(0))
+        ep, _ = edge.init(jax.random.PRNGKey(1))
+        cascade = CascadeLM(edge, cloud,
+                            thresholds=make_thresholds(hi=0.01, lo=0.001))
+        return CascadeServingEngine(cascade, ep, cp, batch_slots=4,
+                                    max_seq_len=96)
+    lm = LM(cfg, kv_chunk=32)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    return ServingEngine(lm, params, batch_slots=4, max_seq_len=96)
+
+
+async def _client(gw: ServingGateway, prompt, max_new: int,
+                  priority: int, deadline_s, quiet: bool) -> dict:
+    """One open-loop client: submit, consume the stream, report."""
+    h = await gw.submit(prompt, max_new_tokens=max_new, priority=priority,
+                        deadline_s=deadline_s)
+    toks = []
+    async for t in h.stream():
+        toks.append(t)
+    r = await h.result()
+    if not quiet:
+        route = getattr(r, "route", "")
+        extra = f" route={route}" if route else ""
+        print(f"req {r.request_id}: status={r.status}{extra} "
+              f"tokens={toks} ttft={r.ttft_s * 1e3:.0f}ms "
+              f"latency={r.latency_s * 1e3:.0f}ms")
+    return {"status": r.status, "streamed": len(toks)}
+
+
+async def _serve(args) -> None:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    rng = np.random.default_rng(0)
+    eng = _build_engine(cfg, args)
+
+    async with ServingGateway(eng, max_queue=args.max_queue,
+                              policy=args.policy) as gw:
+        clients = []
+        for i in range(args.requests):
+            prompt = rng.integers(0, min(1000, cfg.vocab_size),
+                                  size=4 + i % 5)
+            priority = i % 2 if args.classes > 1 else 0
+            clients.append(asyncio.create_task(_client(
+                gw, prompt, args.max_new, priority,
+                args.deadline if priority else None, args.quiet)))
+            # open loop: exponential inter-arrivals at --rate req/s,
+            # drawn independently of how fast the engine is serving
+            await asyncio.sleep(float(rng.exponential(1.0 / args.rate)))
+        results = await asyncio.gather(*clients)
+
+    by_status: dict = {}
+    for res in results:
+        by_status[res["status"]] = by_status.get(res["status"], 0) + 1
+    print(f"served {len(results)} arrivals at {args.rate:.0f} req/s: "
+          f"{by_status}  gateway={gw.stats()}")
 
 
 def main() -> None:
@@ -25,37 +95,19 @@ def main() -> None:
     ap.add_argument("--cascade", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="offered load, requests/s (open loop)")
+    ap.add_argument("--policy", default="block",
+                    choices=["block", "reject", "shed",
+                             "reject-overload", "shed-lowest-class"])
+    ap.add_argument("--max-queue", type=int, default=16)
+    ap.add_argument("--classes", type=int, default=2,
+                    help="SLO classes to alternate arrivals over")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="relative deadline (s) for class-1 arrivals")
+    ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    rng = np.random.default_rng(0)
-
-    if args.cascade:
-        edge_cfg = edge_variant(cfg, layers=1)
-        cloud, edge = LM(cfg, kv_chunk=32), LM(edge_cfg, kv_chunk=32)
-        cp, _ = cloud.init(jax.random.PRNGKey(0))
-        ep, _ = edge.init(jax.random.PRNGKey(1))
-        eng = CascadeEngine(CascadeLM(edge, cloud), ep, cp)
-        tokens = rng.integers(0, cfg.vocab_size,
-                              size=(args.requests, 24))
-        out = eng.query(tokens)
-        m = eng.metrics
-        print(f"cascade: {m.queries} queries, escalated {m.escalated}, "
-              f"wan {m.wan_bytes} B, latency {out['latency_s']*1e3:.0f} ms")
-        return
-
-    lm = LM(cfg, kv_chunk=32)
-    params, _ = lm.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(lm, params, batch_slots=4, max_seq_len=96)
-    for i in range(args.requests):
-        eng.submit(rng.integers(0, min(1000, cfg.vocab_size),
-                                size=4 + i % 5),
-                   max_new_tokens=args.max_new)
-    done = eng.run()
-    for rid, r in sorted(done.items()):
-        print(f"req {rid}: {r.output.tolist()}  ({r.latency_s*1e3:.0f} ms)")
+    asyncio.run(_serve(args))
 
 
 if __name__ == "__main__":

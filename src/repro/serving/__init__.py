@@ -3,6 +3,8 @@ from repro.serving.engine import (DrainBatchEngine, Request, ServingEngine,
 from repro.serving.cascade_engine import (CascadeEngine, CascadeServingEngine,
                                           CircuitBreaker)
 from repro.serving.faults import FaultError, FaultPlan, SeamSpec
+from repro.serving.gateway import (BACKPRESSURE_POLICIES, RequestHandle,
+                                   ServingGateway)
 from repro.serving.kv_cache import (KVCacheBackend, PagedCache, PagedLayout,
                                     RING, RingCache, RingLayout, make_backend)
 from repro.serving.sampler import (request_keys, sample_logits,
@@ -14,6 +16,7 @@ from repro.serving.scheduler import (ChunkTask, PrefillProgress, Scheduler,
 __all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
            "CascadeServingEngine", "CircuitBreaker",
            "FaultPlan", "FaultError", "SeamSpec",
+           "ServingGateway", "RequestHandle", "BACKPRESSURE_POLICIES",
            "sample_logits", "sample_logits_batch",
            "sample_logits_keyed", "request_keys",
            "prompt_buckets", "bucket_for", "chunk_buckets",

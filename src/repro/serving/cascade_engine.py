@@ -123,7 +123,10 @@ class CascadeRequest:
     priority: int = 0                # SLO class, forwarded to the routed engine
     deadline_s: Optional[float] = None   # relative to *cascade* submit time
     submit_s: float = 0.0
+    enqueue_s: float = 0.0           # cascade-queue entry (gateway forward)
     output: Optional[np.ndarray] = None
+    ttft_s: float = 0.0              # from cascade submit (gate wait included)
+    finish_s: float = 0.0
     latency_s: float = 0.0
     status: str = "queued"           # terminal: done|failed|rejected|cancelled
     failure_reason: Optional[str] = None
@@ -202,12 +205,31 @@ class CascadeServingEngine:
 
         self._gate = jax.jit(gate)
         self._edge_params = edge_params
+        self.batch_slots = batch_slots
         self._requests: List[CascadeRequest] = []
         self._next_id = 0
+        # gateway protocol state: routed-but-live requests by *inner*
+        # request id, terminal requests awaiting take_done, and the
+        # optional per-step token tap (translated to cascade ids)
+        self._edge_map: Dict[int, CascadeRequest] = {}
+        self._cloud_map: Dict[int, CascadeRequest] = {}
+        self._done: Dict[int, CascadeRequest] = {}
+        self._on_tokens = None
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                temperature: float = 0.0, priority: int = 0,
                deadline_s: Optional[float] = None) -> int:
+        r = self.make_request(prompt, max_new_tokens, temperature,
+                              priority=priority, deadline_s=deadline_s)
+        self.enqueue(r)
+        return r.request_id
+
+    def make_request(self, prompt: np.ndarray, max_new_tokens: int = 16,
+                     temperature: float = 0.0, priority: int = 0,
+                     deadline_s: Optional[float] = None) -> CascadeRequest:
+        """Validate and stamp a request without queueing it — the async
+        gateway's seam for boundary-accurate ``submit_s`` (same contract
+        as ``ServingEngine.make_request``)."""
         from repro.serving.engine import validate_prompt
         # validate here (not at gate time): the gate prefills through the
         # same buckets, so an over-long prompt must fail fast with the
@@ -220,8 +242,45 @@ class CascadeServingEngine:
                            deadline_s=deadline_s)
         r.submit_s = time.perf_counter()
         r._gen = (max_new_tokens, temperature)
+        return r
+
+    def enqueue(self, r: CascadeRequest, *, ahead_extra: int = 0) -> None:
+        """Queue a made request for the next gate round. Cascade-level
+        admission is the *inner* engines' job at route time (their
+        deadline budgets are already shrunk by gate wait), so this never
+        refuses; ``ahead_extra`` is accepted for protocol parity."""
+        del ahead_extra
+        r.enqueue_s = time.perf_counter()
         self._requests.append(r)
-        return rid
+
+    def queue_depth(self) -> int:
+        return (len(self._requests) + self.edge_engine.queue_depth()
+                + self.cloud_engine.queue_depth())
+
+    @property
+    def on_tokens(self):
+        return self._on_tokens
+
+    @on_tokens.setter
+    def on_tokens(self, cb) -> None:
+        """Install a per-step token tap; inner-engine request ids are
+        translated to cascade ids through the live routing maps."""
+        self._on_tokens = cb
+        if cb is None:
+            self.edge_engine.on_tokens = None
+            self.cloud_engine.on_tokens = None
+            return
+
+        def translated(mapping):
+            def tap(events):
+                out = [(mapping[rid].request_id, arr)
+                       for rid, arr in events if rid in mapping]
+                if out:
+                    cb(out)
+            return tap
+
+        self.edge_engine.on_tokens = translated(self._edge_map)
+        self.cloud_engine.on_tokens = translated(self._cloud_map)
 
     def _inner_deadline(self, r: CascadeRequest) -> Optional[float]:
         """Deadline for the routed engine, shrunk by the time the request
@@ -244,8 +303,8 @@ class CascadeServingEngine:
             return None
         return d - self._degradation_s
 
-    def run(self) -> Dict[int, CascadeRequest]:
-        """Gate every pending request, generate on the routed engine.
+    def _route_pending(self) -> None:
+        """Gate every queued request and hand it to its routed engine.
 
         The circuit breaker guards the edge attempt: while it is open,
         requests skip the gate entirely and fail over to the cloud
@@ -254,17 +313,13 @@ class CascadeServingEngine:
         ``edge``) feeds the breaker's failure count, and a half-open
         probe closes it again once the edge recovers."""
         from repro.cascade.gate import ACCEPT, ESCALATE
+        from repro.serving.engine import bucket_for
         from repro.serving.faults import FaultError
         pending, self._requests = self._requests, []
-        routed: Dict[int, CascadeRequest] = {}
-        edge_ids, cloud_ids = {}, {}
-        t0 = time.perf_counter()
-        from repro.serving.engine import bucket_for
         for r in pending:
             max_new, temp = r._gen
             m = self.metrics
             m.queries += 1
-            routed[r.request_id] = r
             conf = route = None
             if self.breaker.allow():
                 attempt0 = time.perf_counter()
@@ -291,7 +346,7 @@ class CascadeServingEngine:
                 r.route = "failover"
                 m.rerouted += 1
                 m.wan_bytes += len(r.prompt) * 4 + max_new * 4
-                cloud_ids[self.cloud_engine.submit(
+                self._cloud_map[self.cloud_engine.submit(
                     r.prompt, max_new, temp, priority=r.priority,
                     deadline_s=self._failover_deadline(r))] = r
                 continue
@@ -302,13 +357,13 @@ class CascadeServingEngine:
                 m.escalated += 1
                 # token ids up + generated ids down (cf. serve_step)
                 m.wan_bytes += len(r.prompt) * 4 + max_new * 4
-                cloud_ids[self.cloud_engine.submit(
+                self._cloud_map[self.cloud_engine.submit(
                     r.prompt, max_new, temp, priority=r.priority,
                     deadline_s=self._inner_deadline(r))] = r
             elif code == int(ACCEPT):
                 r.route = "accept"
                 m.accepted += 1
-                edge_ids[self.edge_engine.submit(
+                self._edge_map[self.edge_engine.submit(
                     r.prompt, max_new, temp, priority=r.priority,
                     deadline_s=self._inner_deadline(r))] = r
             else:
@@ -316,16 +371,82 @@ class CascadeServingEngine:
                 m.dropped += 1
                 r.output = np.zeros((0,), np.int32)
                 r.status = "done"
-                r.latency_s = time.perf_counter() - t0   # answered at gate
-        for ids, eng in ((edge_ids, self.edge_engine),
-                         (cloud_ids, self.cloud_engine)):
-            for rid, served in eng.run().items():
-                if rid in ids:
-                    ids[rid].output = served.output
-                    ids[rid].latency_s = served.latency_s
-                    ids[rid].status = served.status
-                    ids[rid].failure_reason = served.failure_reason
-        return routed
+                r.finish_s = time.perf_counter()   # answered at the gate
+                r.latency_s = r.finish_s - r.submit_s
+                self._done[r.request_id] = r
+
+    def _collect(self) -> None:
+        """Translate inner-engine terminal requests to cascade terms.
+        Latency/TTFT re-baseline onto the *cascade* submit stamp so gate
+        wait (and breaker cooldown) counts toward the client-visible
+        numbers, not just routed-engine service."""
+        for ids, eng in ((self._edge_map, self.edge_engine),
+                         (self._cloud_map, self.cloud_engine)):
+            for rid, served in eng.take_done().items():
+                r = ids.pop(rid, None)
+                if r is None:
+                    continue
+                r.output = served.output
+                r.status = served.status
+                r.failure_reason = served.failure_reason
+                if served.ttft_s > 0.0:
+                    r.ttft_s = (served.submit_s - r.submit_s
+                                + served.ttft_s)
+                r.finish_s = (served.finish_s if served.finish_s
+                              else time.perf_counter())
+                r.latency_s = r.finish_s - r.submit_s
+                self._done[r.request_id] = r
+
+    @property
+    def pending(self) -> bool:
+        """Work outstanding anywhere in the cascade: ungated requests,
+        routed-but-uncollected ones, or live inner-engine work."""
+        return bool(self._requests or self._edge_map or self._cloud_map
+                    or self.edge_engine.pending or self.cloud_engine.pending)
+
+    def step(self) -> None:
+        """One cascade round: gate whatever queued since the last round,
+        advance each inner engine one step, collect terminals. Public for
+        the async gateway's driver loop; ``run`` is this in a drain loop."""
+        self._route_pending()
+        for eng in (self.edge_engine, self.cloud_engine):
+            if eng.pending:
+                eng.step()
+        self._collect()
+
+    def take_done(self) -> Dict[int, CascadeRequest]:
+        """Drain terminal cascade requests accumulated since last call."""
+        done, self._done = self._done, {}
+        return done
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a cascade request wherever it lives: awaiting the gate,
+        or in flight on its routed engine (any phase — the inner engine
+        handles queued/prefill/decode)."""
+        for r in self._requests:
+            if r.request_id == request_id:
+                self._requests.remove(r)
+                r.output = np.zeros((0,), np.int32)
+                r.status = "cancelled"
+                r.failure_reason = "cancelled: awaiting gate"
+                r.finish_s = time.perf_counter()
+                r.latency_s = r.finish_s - r.submit_s
+                self._done[r.request_id] = r
+                return True
+        for ids, eng in ((self._edge_map, self.edge_engine),
+                         (self._cloud_map, self.cloud_engine)):
+            for irid, r in list(ids.items()):
+                if r.request_id == request_id:
+                    ok = eng.cancel(irid)
+                    self._collect()   # surface the terminal immediately
+                    return ok
+        return False
+
+    def run(self) -> Dict[int, CascadeRequest]:
+        """Drain loop: gate + generate until nothing is in flight."""
+        while self.pending:
+            self.step()
+        return self.take_done()
 
     def engine_metrics(self) -> Dict[str, object]:
         """Monitoring snapshot across the cascade: routing/WAN counters,

@@ -140,6 +140,12 @@ class Request:
     not_before_step: int = 0     # backoff: ineligible before this step
     fault_s: float = 0.0         # wall-clock of last fault requeue (recovery
     #                              latency = next slot grant - fault_s)
+    enqueue_s: float = 0.0       # wall-clock at *engine* queue entry. Equal
+    #                              to submit_s on the direct submit() path;
+    #                              later when a gateway held the request in
+    #                              its bounded queue first — latency/TTFT are
+    #                              always measured from submit_s (the service
+    #                              boundary), never from here
 
 
 @dataclasses.dataclass
@@ -271,6 +277,14 @@ class ServingEngine:
         self.retries_total = 0        # per-request retries, summed
         self.recovery_latencies: List[float] = []  # fault -> re-grant, s
         self._status_counts = collections.Counter()  # terminal dispositions
+        # per-step token tap (the gateway's streaming feed): when set, every
+        # decode round's host sync is followed by a call with the round's
+        # newly generated tokens, [(request_id, np.ndarray), ...]. Emission
+        # is monotone per request — preemption/fault rollback checkpoints
+        # every generated token, so a resumed stream continues exactly
+        # where it stopped and a streamed token is never retracted
+        self.on_tokens = None
+        self._emitted: Dict[int, int] = {}     # rid -> tokens already tapped
 
         if chunk_tokens is not None:
             self._validate_chunk_mixers(chunk_tokens)
@@ -372,6 +386,20 @@ class ServingEngine:
         ``deadline_infeasible`` — still returned from ``run``) or
         downgraded to best-effort (deadline stripped, ``downgraded``
         flagged) rather than admitted to miss."""
+        r = self.make_request(prompt, max_new_tokens, temperature,
+                              priority=priority, deadline_s=deadline_s)
+        self.enqueue(r)
+        return r.request_id
+
+    def make_request(self, prompt: np.ndarray, max_new_tokens: int = 16,
+                     temperature: float = 0.0, priority: int = 0,
+                     deadline_s: Optional[float] = None) -> Request:
+        """Validate and stamp a request *without* queueing it. The async
+        gateway uses this seam to stamp ``submit_s`` at the service
+        boundary — time a request spends in the gateway's bounded submit
+        queue then counts toward its latency/TTFT/deadline, which the old
+        submit-at-grant path silently dropped. ``submit()`` is exactly
+        ``make_request`` + ``enqueue``."""
         prompt = validate_prompt(prompt, max_new_tokens, self.max_seq_len,
                                  self.truncate_prompts)
         rid = self._next_id
@@ -379,25 +407,38 @@ class ServingEngine:
         r = Request(rid, prompt, max_new_tokens, temperature,
                     priority=priority, deadline_s=deadline_s)
         r.submit_s = time.perf_counter()
+        return r
+
+    def enqueue(self, r: Request, *, ahead_extra: int = 0) -> None:
+        """Admission-control gate + engine-queue insert for a made request.
+        ``ahead_extra`` counts work queued *upstream* of the engine (the
+        gateway's bounded submit queue) so deadline feasibility prices the
+        whole line, not just the engine-visible tail; the deadline budget
+        is likewise shrunk by the time already spent since ``submit_s``."""
         policy = self.scheduler.admission_policy
         if policy is not None and r.deadline_s is not None:
             mine = request_rank(r)
-            ahead = (len(self._slots) + len(self._prefilling)
+            ahead = (len(self._slots) + len(self._prefilling) + ahead_extra
                      + sum(1 for q in self._queue if request_rank(q) <= mine))
+            remaining = r.deadline_s - (time.perf_counter() - r.submit_s)
             if not self.scheduler.deadline_feasible(
-                    deadline_s=r.deadline_s, ahead=ahead,
+                    deadline_s=remaining, ahead=ahead,
                     priority=r.priority):
                 if policy == "reject":
                     self._terminal(
                         r, "rejected",
                         f"deadline_infeasible: {ahead} requests ahead at "
                         f"the measured class service rate cannot finish "
-                        f"within {r.deadline_s:.3f}s")
-                    return rid
+                        f"within {remaining:.3f}s")
+                    return
                 r.deadline_s = None          # downgrade: serve best-effort
                 r.downgraded = True
+        r.enqueue_s = time.perf_counter()
         self._queue.append(r)
-        return rid
+
+    def queue_depth(self) -> int:
+        """Requests waiting in the engine's own queue (resumes included)."""
+        return len(self._queue)
 
     def warm_compile(self) -> None:
         """Pre-compile every chunk-program variant and every decode-scan
@@ -508,6 +549,13 @@ class ServingEngine:
         completed since the last ``run`` (``step`` completions included)."""
         while self.pending:
             self.step()
+        return self.take_done()
+
+    def take_done(self) -> Dict[int, Request]:
+        """Drain the terminal-request buffer accumulated since the last
+        call (every status: done/failed/rejected/cancelled). The gateway
+        polls this after each ``step()`` to resolve handles and close
+        streams; ``run()`` is a drain loop ending in one ``take_done``."""
         done, self._done = self._done, {}
         return done
 
@@ -917,6 +965,12 @@ class ServingEngine:
                 else np.zeros((0,), np.int32)
         r.finish_s = time.perf_counter()
         r.latency_s = r.finish_s - r.submit_s
+        self._emitted.pop(r.request_id, None)
+        if status == "failed" and r.deadline_s is not None:
+            # quarantine is a deadline miss: the client asked for a result
+            # by a time and will never get one. Cancelled/rejected requests
+            # are *not* counted — the client withdrew / was never admitted.
+            self.scheduler.observe_deadline(r.priority, False)
         self._status_counts[status] += 1
         self._done[r.request_id] = r
 
@@ -1000,6 +1054,7 @@ class ServingEngine:
             "generated_tokens": self.generated_tokens,
             "host_syncs": self.host_syncs,
             "occupancy": self.occupancy(),
+            "deadline_hits": self.scheduler.deadline_hit_rates(),
         }
 
     def _try_preempt(self, slots) -> bool:
@@ -1099,9 +1154,28 @@ class ServingEngine:
             # budget-0 requests never produce one and get no TTFT
             if r.ttft_s == 0.0 and r.max_new_tokens > 0:
                 r.ttft_s = now - r.submit_s
+        if self.on_tokens is not None:
+            # stream tap: surface this round's new tokens per live request
+            # (the host sync above already landed, so the arrays are final
+            # for the round; a row that hit EOS mid-scan stopped at its
+            # true step count). Rides the same sync — no extra round-trip
+            # boundary, just two host pulls the gateway opted into.
+            steps_h = np.asarray(self._state["steps"])
+            out_h = np.asarray(self._state["out"])
+            events = []
+            for slot, r in slots.items():
+                n = int(steps_h[slot])
+                seen = self._emitted.get(r.request_id, 0)
+                if n > seen:
+                    events.append((r.request_id,
+                                   np.array(out_h[slot, seen:n])))
+                    self._emitted[r.request_id] = n
+            if events:
+                self.on_tokens(events)
         for slot in [s for s, _ in slots.items() if not active[s]]:
             r = slots.pop(slot)
             self._scanned.pop(slot, None)
+            self._emitted.pop(r.request_id, None)
             n = int(self._state["steps"][slot])
             r.output = np.asarray(self._state["out"][slot, :n])
             r.status = "done"
@@ -1111,6 +1185,9 @@ class ServingEngine:
             self._status_counts["done"] += 1
             self.scheduler.observe_service(r.priority,
                                            r.finish_s - r.admit_s)
+            if r.deadline_s is not None:
+                self.scheduler.observe_deadline(
+                    r.priority, r.latency_s <= r.deadline_s)
             self._cache_state = self.backend.free_slot(self._cache_state,
                                                        slot)
             free.append(slot)

@@ -189,6 +189,7 @@ class Scheduler:
         self.admission_policy = admission_policy
         self._ewma_alpha = service_ewma_alpha
         self._service_s: dict = {}      # priority class -> EWMA service s
+        self._deadline_obs: dict = {}   # priority class -> [hits, total]
         if max_decode_steps < 1:
             raise ValueError(
                 f"max_decode_steps must be >= 1 (got {max_decode_steps})")
@@ -243,6 +244,35 @@ class Scheduler:
         if self._service_s:
             return sum(self._service_s.values()) / len(self._service_s)
         return None
+
+    def reset_estimates(self) -> None:
+        """Drop the service EWMAs and deadline observations — for
+        drivers that warm/compile through real requests before the
+        measured (or served) traffic begins. A warm-up completion's
+        service time is dominated by XLA compiles that steady-state
+        serving never pays again; pricing admission with it would refuse
+        perfectly feasible deadlines (cold start admits instead)."""
+        self._service_s.clear()
+        self._deadline_obs.clear()
+
+    def observe_deadline(self, priority: int, hit: bool) -> None:
+        """Record one deadline outcome for ``priority``: completion within
+        the deadline counts as a hit, completion after it (or quarantine)
+        as a miss. Cancelled/rejected requests are never recorded — the
+        hit *rate* is the feedback signal that tells us whether
+        ``deadline_feasible``'s first-order admission estimate is honest,
+        and refusals are its output, not its ground truth."""
+        hits, total = self._deadline_obs.get(priority, (0, 0))
+        self._deadline_obs[priority] = (hits + (1 if hit else 0), total + 1)
+
+    def deadline_hit_rates(self) -> dict:
+        """Per-class deadline outcomes: ``{priority: {"hits", "total",
+        "rate"}}`` over every deadlined request that reached a counted
+        terminal state (done or quarantined)."""
+        return {
+            p: {"hits": h, "total": t, "rate": (h / t if t else 0.0)}
+            for p, (h, t) in sorted(self._deadline_obs.items())
+        }
 
     def deadline_feasible(self, *, deadline_s: float, ahead: int,
                           priority: int) -> bool:
