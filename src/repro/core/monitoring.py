@@ -65,6 +65,30 @@ class MonitoringService(EventLog):
             m["rate"] = m["hits"] / m["total"] if m["total"] else 0.0
         return merged or None
 
+    def speculative_acceptance(self, component: str) -> Optional[Dict]:
+        """Per-class speculative acceptance from the latest serving
+        snapshot: ``{priority: {"drafted", "accepted", "rate"}}`` — how
+        well the draft model is earning its FLOPs per SLO class. For
+        cascade snapshots the inner engines' tables are merged (in
+        practice only the cloud engine drafts, but the merge keeps the
+        accessor shape-agnostic like ``deadline_hit_rates``)."""
+        snap = self.serving_snapshot(component)
+        if snap is None:
+            return None
+        if "speculative" in snap:
+            return snap["speculative"].get("per_class", {})
+        merged: Dict = {}
+        for side in ("edge", "cloud"):
+            table = snap.get(side, {}).get("speculative", {})
+            for p, row in table.get("per_class", {}).items():
+                m = merged.setdefault(p, {"drafted": 0, "accepted": 0})
+                m["drafted"] += row["drafted"]
+                m["accepted"] += row["accepted"]
+        for m in merged.values():
+            m["rate"] = (m["accepted"] / m["drafted"]
+                         if m["drafted"] else 0.0)
+        return merged or None
+
     def component_status(self) -> Dict[str, str]:
         status: Dict[str, str] = {}
         for ev in self.events:

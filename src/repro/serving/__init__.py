@@ -7,8 +7,9 @@ from repro.serving.gateway import (BACKPRESSURE_POLICIES, RequestHandle,
                                    ServingGateway)
 from repro.serving.kv_cache import (KVCacheBackend, PagedCache, PagedLayout,
                                     RING, RingCache, RingLayout, make_backend)
-from repro.serving.sampler import (request_keys, sample_logits,
-                                   sample_logits_batch, sample_logits_keyed)
+from repro.serving.sampler import (accepted_prefix_length, request_keys,
+                                   sample_logits, sample_logits_batch,
+                                   sample_logits_keyed)
 from repro.serving.scheduler import (ChunkTask, PrefillProgress, Scheduler,
                                      StepPlan, bucket_for, chunk_buckets,
                                      prompt_buckets, request_rank)
@@ -18,7 +19,7 @@ __all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
            "FaultPlan", "FaultError", "SeamSpec",
            "ServingGateway", "RequestHandle", "BACKPRESSURE_POLICIES",
            "sample_logits", "sample_logits_batch",
-           "sample_logits_keyed", "request_keys",
+           "sample_logits_keyed", "request_keys", "accepted_prefix_length",
            "prompt_buckets", "bucket_for", "chunk_buckets",
            "validate_prompt", "Scheduler", "StepPlan", "ChunkTask",
            "PrefillProgress", "request_rank",

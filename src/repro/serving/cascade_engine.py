@@ -154,7 +154,8 @@ class CascadeServingEngine:
                  fault_plan=None,
                  breaker_failure_threshold: int = 3,
                  breaker_cooldown: int = 4,
-                 admission_policy: Optional[str] = None):
+                 admission_policy: Optional[str] = None,
+                 speculative_tokens: int = 0):
         from repro.serving.engine import ServingEngine
         self.cascade = cascade
         self.max_seq_len = max_seq_len
@@ -188,8 +189,16 @@ class CascadeServingEngine:
                          admission_policy=admission_policy)
         self.edge_engine = ServingEngine(cascade.edge, edge_params,
                                          seed=seed, **engine_kw)
-        self.cloud_engine = ServingEngine(cascade.cloud, cloud_params,
-                                          seed=seed + 1, **engine_kw)
+        # speculative cloud decode with the cascade's own edge model as the
+        # draft: the ACE edge/cloud split *is* a draft/verify pair — the
+        # same small model that gates prompts proposes tokens the big one
+        # verifies in a single chunked dispatch. The edge engine itself
+        # never speculates (it has no smaller model to draft for it).
+        self.cloud_engine = ServingEngine(
+            cascade.cloud, cloud_params, seed=seed + 1,
+            draft_model=cascade.edge if speculative_tokens > 0 else None,
+            draft_params=edge_params if speculative_tokens > 0 else None,
+            speculative_tokens=speculative_tokens, **engine_kw)
 
         def gate(params, tokens, length):
             # bucketed like engine prefill: right-padded, gate on the last

@@ -25,6 +25,23 @@ get a look-ahead block reservation (``reserve_lookahead`` →
 ``begin_slot``) before each scan so every in-scan append lands in an
 allocated block.
 
+With a ``draft_model`` and ``speculative_tokens=k`` the engine decodes
+**speculatively**: a small draft LM (the natural choice is the cascade's
+edge model — the ACE edge/cloud split is exactly a draft/verify pair)
+proposes k tokens per slot autoregressively on its own ring cache, and
+the target verifies all of them in *one* chunked decode dispatch —
+paying one target dispatch and one host sync per ``1 + accepted`` tokens
+instead of per token. Verification is key-coupled (see ``_spec_impl``):
+draft and target sample through the same per-(request, step) folded
+keys, a proposal is accepted iff it equals the token the target samples
+there, so speculative streams are **token-for-token identical to the
+non-speculative engine at every temperature** — acceptance rate is the
+only thing draft quality affects. The scheduler picks the draft depth
+per plan beside its decode horizon, collapsing to non-speculative while
+prefill work is pending or while the acceptance EWMA says drafting
+loses, and the paged look-ahead reservation covers the k-token worst
+case so a verify append never faults mid-dispatch.
+
 Scheduling policy lives in ``repro.serving.scheduler``: each step the
 ``Scheduler`` composes a mixed batch under a token budget — decode tokens
 for the active slots plus prompt *chunks* for admitting requests — and the
@@ -102,9 +119,9 @@ import numpy as np
 
 from repro.models.model import LM
 from repro.serving.faults import FaultError, FaultPlan
-from repro.serving.kv_cache import RingLayout, make_backend
-from repro.serving.sampler import (request_keys, sample_logits_batch,
-                                   sample_logits_keyed)
+from repro.serving.kv_cache import RingCache, RingLayout, make_backend
+from repro.serving.sampler import (accepted_prefix_length, request_keys,
+                                   sample_logits_batch, sample_logits_keyed)
 from repro.serving.scheduler import (MONOLITHIC, PrefillProgress, Scheduler,
                                      bucket_for, prompt_buckets,
                                      request_rank)
@@ -219,7 +236,10 @@ class ServingEngine:
                  max_retries: int = 3,
                  backoff_base_steps: int = 1,
                  backoff_cap_steps: int = 8,
-                 admission_policy: Optional[str] = None):
+                 admission_policy: Optional[str] = None,
+                 draft_model: Optional[LM] = None,
+                 draft_params=None,
+                 speculative_tokens: int = 0):
         if lm.cfg.frontend.kind == "audio":
             raise NotImplementedError("engine serves text-token streams")
         self.lm = lm
@@ -295,11 +315,36 @@ class ServingEngine:
             prefix_sharing=prefix_sharing)
         if chunk_tokens is not None:
             self._validate_chunk_layout()
-        self.scheduler = Scheduler(batch_slots=batch_slots,
-                                   chunk_tokens=chunk_tokens,
-                                   token_budget=token_budget,
-                                   max_decode_steps=max_decode_steps,
-                                   admission_policy=admission_policy)
+        # speculative decoding: a draft LM proposes k tokens per slot on its
+        # own lightweight ring cache; the target verifies all of them in one
+        # chunked decode dispatch (see _spec_impl). speculative_tokens=0 (or
+        # no draft model) leaves every code path below bit-identical to the
+        # non-speculative engine.
+        if speculative_tokens > 0 and draft_model is None:
+            raise ValueError("speculative_tokens > 0 needs a draft_model")
+        self.speculative = draft_model is not None and speculative_tokens > 0
+        if self.speculative:
+            if draft_params is None:
+                raise ValueError("draft_model needs draft_params")
+            if draft_model.cfg.frontend.kind == "audio":
+                raise NotImplementedError(
+                    "draft model must serve text-token streams")
+            if draft_model.cfg.padded_vocab != lm.cfg.padded_vocab:
+                raise ValueError(
+                    f"draft vocab ({draft_model.cfg.padded_vocab}) must "
+                    f"match the target's ({lm.cfg.padded_vocab}): "
+                    f"verification compares token ids")
+            bad = lm.chunk_incompatible_mixer()
+            if bad is not None:
+                raise NotImplementedError(
+                    f"speculative verification is a multi-token chunk query;"
+                    f" the target's {bad!r} mixer folds tokens sequentially "
+                    f"— use speculative_tokens=0")
+        self.scheduler = Scheduler(
+            batch_slots=batch_slots, chunk_tokens=chunk_tokens,
+            token_budget=token_budget, max_decode_steps=max_decode_steps,
+            admission_policy=admission_policy,
+            speculative_tokens=speculative_tokens if self.speculative else 0)
         # prefix sharing hashes prompt tokens at admission; only meaningful
         # with chunked install (monolithic prefill recomputes everything)
         self._admit_with_tokens = (
@@ -345,6 +390,37 @@ class ServingEngine:
                 "(paged); the ring backend resumes by recompute")
         self._preempt_swap = (preempt_mode in ("auto", "swap")
                               and hasattr(self.backend, "swap_out"))
+        # speculative accounting (zeroed even without a draft so metrics()
+        # keeps a uniform shape): drafted = proposals issued (slots × k),
+        # accepted = proposals the target kept, committed = accepted + the
+        # anchor token every speculative round banks per slot
+        self.spec_rounds = 0
+        self.spec_slot_rounds = 0            # Σ active slots over spec rounds
+        self.spec_drafted_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.spec_committed_tokens = 0
+        self.spec_fallbacks = 0              # draft-seam faults served plain
+        self._spec_class: Dict[int, tuple] = {}  # priority -> (drafted, acc)
+        if self.speculative:
+            self.draft_lm = draft_model
+            self.draft_params = draft_params
+            self._draft_windowed = _has_windowed_blocks(draft_model)
+            # the draft always rides a ring cache, whatever the target's
+            # backend: it never pages, never swaps, never shares prefixes —
+            # a fixed max_seq_len line per slot is its whole state
+            self._draft_backend = RingCache(
+                draft_model, draft_params, batch_slots=batch_slots,
+                max_seq_len=max_seq_len, proto_len=self.buckets[0])
+            self._draft_state = self._draft_backend.init()
+            # slots whose draft cache missed tokens (generated by plain
+            # decode rounds while speculation was collapsed): re-synced by
+            # a draft prefill before the next speculative round reads them
+            self._draft_dirty: set = set()
+            self._spec_fn = jax.jit(self._spec_impl,
+                                    donate_argnums=(2, 3, 4),
+                                    static_argnums=(6,))  # per draft depth k
+            self._draft_fill_fn = jax.jit(self._draft_fill_impl,
+                                          donate_argnums=(1,))  # per bucket
 
     def _validate_chunk_mixers(self, chunk_tokens: int) -> None:
         if not (1 <= chunk_tokens <= self.max_seq_len):
@@ -492,6 +568,22 @@ class ServingEngine:
                 self._cache_state, self._state = self._scan_fn(
                     self.params, self._cache_state, self._state,
                     self._base_key, k)
+        if self.speculative:
+            # speculative executables: the draft-fill prefill per prompt
+            # bucket (junk K/V written into idle slot 0 sits behind the
+            # same pad/overwrite argument as target prefill pads) and the
+            # fused propose/verify program per draft depth (all slots
+            # inactive -> masked appends, untouched outputs: a pure no-op)
+            for bucket in self.buckets:
+                self._draft_state = self._draft_fill_fn(
+                    self.draft_params, self._draft_state,
+                    jnp.zeros((1, bucket), jnp.int32), jnp.int32(0),
+                    jnp.int32(0))
+            for k in self.scheduler.spec_schedule:
+                (self._cache_state, self._draft_state,
+                 self._state) = self._spec_fn(
+                    self.params, self.draft_params, self._cache_state,
+                    self._draft_state, self._state, self._base_key, k)
 
     @property
     def pending(self) -> bool:
@@ -530,8 +622,24 @@ class ServingEngine:
                                          len(slots) + len(prefilling))
         if slots:
             try:
-                self._decode_round(slots, free, self._done,
-                                   plan.decode_steps)
+                if plan.spec_tokens > 0 and self.speculative:
+                    try:
+                        self._spec_round(slots, free, self._done,
+                                         plan.spec_tokens)
+                    except FaultError as e:
+                        if e.seam != "draft":
+                            raise
+                        # the draft dispatch is down: serve this round
+                        # without speculation. Commits are target samples
+                        # under the baseline key schedule either way, so
+                        # the token streams are unchanged — degraded
+                        # throughput, never degraded output
+                        self.spec_fallbacks += 1
+                        self._decode_round(slots, free, self._done,
+                                           plan.decode_steps)
+                else:
+                    self._decode_round(slots, free, self._done,
+                                       plan.decode_steps)
             except FaultError as e:
                 # the decode dispatch was poisoned *before* touching device
                 # state (launch failure semantics), so every active slot
@@ -669,6 +777,135 @@ class ServingEngine:
             body, (cache_state["caches"], state), xs=None, length=k)
         return {"caches": caches, "tables": tables}, state
 
+    def _draft_fill_impl(self, draft_params, draft_state, tokens, length,
+                         slot):
+        """Install one bucketed token stream into the draft ring — the
+        draft-side analogue of ``_admit_impl`` minus sampling state (the
+        speculative program derives everything it needs from the target's
+        carry). ``prefill_fill`` replaces the whole slot row, so pad
+        entries and any previous tenant's K/V vanish together."""
+        _, one_caches = self.draft_lm.prefill(
+            draft_params, {"tokens": tokens}, cache_width=self.max_seq_len,
+            last_only=True,
+            lengths=jnp.reshape(length, (1,)) if self._draft_windowed
+            else None)
+        return self._draft_backend.prefill_fill(draft_state, one_caches,
+                                                slot, length, None)
+
+    def _spec_impl(self, params, draft_params, cache_state, draft_state,
+                   state, base_key, k):
+        """One fused propose-k/verify round: draft scan → one chunked
+        target dispatch → accept → commit, all on device.
+
+        Verification is **key-coupled**: the anchor token ``t0`` is
+        sampled from the carried ``last`` logits with exactly the key the
+        plain step would fold, the draft proposes ``d_1..d_k`` with the
+        keys of the *following* steps, the target attends the whole
+        (k+1)-token chunk ``[t0, d_1..d_k]`` in one ``prefill_chunk``
+        call, and ``s_i`` — sampled from the target's verify logits with
+        the same folded key as ``d_i`` — is precisely the token the
+        baseline engine would emit at that step. A proposal is accepted
+        iff it *equals* its baseline token, so every committed token is a
+        baseline token: speculative streams are token-for-token identical
+        to K=1 at every temperature (greedy included — argmax is the
+        temperature-0 case of the same coupling). On a rejection the
+        corrected token is not committed here; it re-emerges as the next
+        round's anchor — same key, same logits, same token.
+
+        The draft scan runs k+1 iterations: the last consumes ``d_k`` so
+        the draft cache stays contiguous through a fully-accepted round
+        (its sampled output is discarded). Both caches mask appends to
+        ``i < headroom`` — a token at or past the budget edge can never
+        commit, and the mask keeps every append inside the slot's
+        reservation (ring width / paged look-ahead)."""
+        b = self.batch_slots
+        active = state["active"]
+        rid, steps, temp, pos = (state["rid"], state["steps"],
+                                 state["temp"], state["pos"])
+        headroom = state["budget"] - steps       # >= 1 on active rows
+        t0 = sample_logits_keyed(
+            request_keys(base_key, rid, steps), state["last"], temp)
+
+        def draft_body(carry, i):
+            dcaches, tok = carry
+            ok = active & (i < headroom)
+            feed = jnp.where(active, tok, 0)[:, None]
+            dlogits, dcaches = self.draft_lm.decode_step(
+                draft_params, dcaches, feed, pos + i,
+                layout=self._draft_backend.layout, block_tables=None,
+                valid=ok[:, None])
+            nxt = sample_logits_keyed(
+                request_keys(base_key, rid, steps + i + 1),
+                dlogits[:, 0, :].astype(jnp.float32), temp)
+            return (dcaches, nxt), nxt
+
+        (dcaches, _), drafted = jax.lax.scan(
+            draft_body, (draft_state["caches"], t0),
+            jnp.arange(k + 1, dtype=jnp.int32))
+        proposals = jnp.moveaxis(drafted, 0, 1)[:, :k]          # (B, k)
+
+        chunk = jnp.concatenate([t0[:, None], proposals], axis=1)
+        offs = jnp.arange(k + 1, dtype=jnp.int32)
+        ok = active[:, None] & (offs[None, :] < headroom[:, None])
+        logits, caches = self.lm.prefill_chunk(
+            params, cache_state["caches"], chunk, pos,
+            layout=self.backend.layout, block_tables=cache_state["tables"],
+            valid=ok)
+        logits = logits.astype(jnp.float32)                 # (B, k+1, V)
+
+        # s_i reads logits row i-1: the target's distribution after the
+        # first i chunk tokens, i.e. the baseline ``last`` at step steps+i.
+        # All k verifications fold keys and sample as one flattened batch:
+        # per-element results are identical to k separate calls, but the
+        # program carries one fold/categorical op pair instead of k — on
+        # a small-model host the op count, not the FLOPs, is the cost
+        ksteps = (steps[:, None] + offs[None, 1:]).reshape(-1)   # (B*k,)
+        krid = jnp.broadcast_to(rid[:, None], (b, k)).reshape(-1)
+        ktemp = jnp.broadcast_to(temp[:, None], (b, k)).reshape(-1)
+        target_toks = sample_logits_keyed(
+            request_keys(base_key, krid, ksteps),
+            logits[:, :k, :].reshape(b * k, logits.shape[-1]),
+            ktemp).reshape(b, k)                             # (B, k)
+        j = accepted_prefix_length(proposals, target_toks)  # (B,) in [0,k]
+        commit = jnp.minimum(1 + j, headroom)
+        eos_hit = jnp.zeros((b,), jnp.bool_)
+        if self.eos_id is not None:
+            is_eos = chunk == self.eos_id
+            has_eos = jnp.any(is_eos, axis=1)
+            eos_idx = jnp.argmax(is_eos, axis=1)    # first EOS in the chunk
+            commit = jnp.where(has_eos,
+                               jnp.minimum(commit, eos_idx + 1), commit)
+            eos_hit = has_eos & (eos_idx < commit)
+
+        rows = jnp.arange(b)
+        write = ok & (offs[None, :] < commit[:, None])
+        idx = jnp.clip(steps[:, None] + offs[None, :], 0,
+                       self.max_seq_len - 1)
+        out = state["out"].at[rows[:, None], idx].set(
+            jnp.where(write, chunk, state["out"][rows[:, None], idx]))
+        # logits row commit-1 is the distribution for the step after the
+        # last committed token — exactly the ``last`` the baseline carry
+        # would hold there
+        last = jnp.take_along_axis(
+            logits, jnp.clip(commit - 1, 0, k)[:, None, None], axis=1)[:, 0]
+        last = jnp.where(active[:, None], last, state["last"])
+        dcommit = jnp.where(active, commit, 0)
+        new_steps = steps + dcommit
+        finished = (new_steps >= state["budget"]) | eos_hit
+        state = {
+            "last": last,
+            "pos": pos + dcommit,
+            "steps": new_steps,
+            "budget": state["budget"],
+            "temp": temp,
+            "rid": rid,
+            "active": active & ~finished,
+            "out": out,
+        }
+        return ({"caches": caches, "tables": cache_state["tables"]},
+                {"caches": dcaches, "tables": draft_state["tables"]},
+                state)
+
     # -- host-side management -------------------------------------------------
     def _try_admit(self, slots, free, prefilling):
         """Scheduler admission callback: grant the *best-ranked* waiting
@@ -782,6 +1019,10 @@ class ServingEngine:
         pp.next = c.start + c.length
         if c.final:
             del prefilling[c.slot]
+            if self.speculative:
+                # arm the draft cache with the slot's whole visible stream
+                # (prompt, or prompt + generated on a recompute-resume)
+                self._draft_fill(c.slot, np.asarray(src, np.int32))
             if r.resume is None:
                 # the slot's full prompt blocks now hold real K/V: publish
                 # them for prefix sharing by later admissions (a resumed
@@ -813,6 +1054,8 @@ class ServingEngine:
         self.prefill_tokens_total += length
         self.planned_token_slots += bucket
         self.useful_prefill_tokens += length
+        if self.speculative:
+            self._draft_fill(slot, tokens_1d)
         if r.resume is None:
             self._scanned[slot] = 0
         else:
@@ -860,6 +1103,11 @@ class ServingEngine:
                          # a budget-0 slot is reaped, never decoded — the
                          # same admission-time rule the prefill paths apply
                          active=(slot, rs.steps < r.max_new_tokens))
+        if self.speculative:
+            # the swap checkpoint restores only the target's K/V; the
+            # draft cache is rebuilt from the host token stream
+            self._draft_fill(slot, np.concatenate(
+                [r.prompt, rs.tokens]).astype(np.int32))
         self._restore_checkpoint(r, slot)
         slots[slot] = r
 
@@ -894,6 +1142,8 @@ class ServingEngine:
             self._cache_state = self.backend.free_slot(self._cache_state,
                                                        slot)
         self._scanned.pop(slot, None)
+        if self.speculative:
+            self._draft_dirty.discard(slot)
         self._free.append(slot)
         return r
 
@@ -1023,6 +1273,8 @@ class ServingEngine:
                 self._cache_state = self.backend.free_slot(
                     self._cache_state, slot)
                 self._scanned.pop(slot, None)
+                if self.speculative:
+                    self._draft_dirty.discard(slot)
                 self._free.append(slot)
                 self._terminal(r, "cancelled", "cancelled: mid-decode",
                                output=out)
@@ -1055,6 +1307,32 @@ class ServingEngine:
             "host_syncs": self.host_syncs,
             "occupancy": self.occupancy(),
             "deadline_hits": self.scheduler.deadline_hit_rates(),
+            "speculative": self.speculative_metrics(),
+        }
+
+    def speculative_metrics(self) -> Dict[str, object]:
+        """Speculation accounting: drafted vs accepted proposals overall
+        and per SLO class, plus committed tokens per speculative dispatch
+        (1 + per-slot acceptance — the quantity that has to beat a plain
+        step's guaranteed 1 for drafting to pay). All-zero, same shape,
+        on an engine without a draft model."""
+        drafted, accepted = self.spec_drafted_tokens, self.spec_accepted_tokens
+        return {
+            "enabled": self.speculative,
+            "rounds": self.spec_rounds,
+            "slot_rounds": self.spec_slot_rounds,
+            "fallbacks": self.spec_fallbacks,
+            "drafted_tokens": drafted,
+            "accepted_tokens": accepted,
+            "committed_tokens": self.spec_committed_tokens,
+            "acceptance_rate": accepted / drafted if drafted else 0.0,
+            "committed_per_dispatch": (
+                self.spec_committed_tokens / self.spec_slot_rounds
+                if self.spec_slot_rounds else 0.0),
+            "per_class": {
+                p: {"drafted": d, "accepted": a,
+                    "rate": a / d if d else 0.0}
+                for p, (d, a) in sorted(self._spec_class.items())},
         }
 
     def _try_preempt(self, slots) -> bool:
@@ -1147,21 +1425,109 @@ class ServingEngine:
         self.planned_token_slots += len(slots) * k
         for slot in slots:
             self._scanned[slot] += k
+        if self.speculative:
+            # the draft cache saw none of this round's tokens: mark the
+            # slots so the next speculative round re-syncs them first
+            self._draft_dirty.update(slots.keys())
+        self._finish_round(slots, free, done)
+
+    def _spec_round(self, slots, free, done, k: int):
+        """One speculative propose-k/verify round (see ``_spec_impl``).
+        The look-ahead reservation covers the worst case — the anchor plus
+        all k proposals accepted — so the verify append can never fault
+        mid-dispatch; rejected tails were masked out of the cache and cost
+        only the token-slots ``occupancy`` charges for them."""
+        if self._faults is not None:
+            # the draft seam fails the whole speculative dispatch at
+            # launch, before any state is touched: step() serves the round
+            # through the plain decode path instead (exact either way)
+            self._faults.check(
+                "draft", f"speculative round over {len(slots)} slots, k={k}")
+        self._resync_draft(slots)
+        self._reserve_lookahead(slots, k + 1)
+        before = dict(self._scanned)
+        self._cache_state, self._draft_state, self._state = self._spec_fn(
+            self.params, self.draft_params, self._cache_state,
+            self._draft_state, self._state, self._base_key, k)
+        self.host_syncs += 1
+        self.planned_token_slots += len(slots) * (k + 1)
+        self.spec_rounds += 1
+        steps_h = np.asarray(self._state["steps"])
+        accepted_total = 0
+        for slot, r in slots.items():
+            committed = int(steps_h[slot]) - before[slot]
+            self._scanned[slot] = int(steps_h[slot])
+            self.decode_steps += committed
+            self.spec_slot_rounds += 1
+            self.spec_drafted_tokens += k
+            self.spec_committed_tokens += committed
+            acc = max(0, committed - 1)   # anchor token is never "accepted"
+            self.spec_accepted_tokens += acc
+            accepted_total += acc
+            d, a = self._spec_class.get(r.priority, (0, 0))
+            self._spec_class[r.priority] = (d + k, a + acc)
+        self.scheduler.observe_speculation(len(slots), len(slots) * k,
+                                           accepted_total)
+        self._finish_round(slots, free, done, steps_h=steps_h)
+
+    def _resync_draft(self, slots) -> None:
+        """Rebuild the draft cache for slots that advanced through plain
+        decode rounds (the draft saw none of those tokens): one bucketed
+        draft prefill of prompt + generated per dirty slot. Transitions
+        are rare — a burst of prefill work collapses speculation for its
+        duration, then each affected slot pays this once."""
+        dirty = [s for s in slots if s in self._draft_dirty]
+        if not dirty:
+            return
+        steps_h = np.asarray(self._state["steps"])
+        out_h = np.asarray(self._state["out"])
+        for slot in dirty:
+            r = slots[slot]
+            n = int(steps_h[slot])
+            self._draft_fill(slot, np.concatenate(
+                [r.prompt, out_h[slot, :n]]).astype(np.int32))
+
+    def _draft_fill(self, slot: int, tokens_1d: np.ndarray) -> None:
+        """Prefill the draft cache for ``slot`` with its full visible
+        stream (prompt, plus generated tokens on resume / re-sync),
+        bucketed like target prefill so the retrace set stays
+        ``|buckets|``."""
+        length = len(tokens_1d)
+        bucket = bucket_for(length, self.buckets)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :length] = tokens_1d
+        self._draft_state = self._draft_fill_fn(
+            self.draft_params, self._draft_state, jnp.asarray(tokens),
+            jnp.int32(length), jnp.int32(slot))
+        self._draft_dirty.discard(slot)
+
+    def _finish_round(self, slots, free, done, steps_h=None, out_h=None):
+        """Post-dispatch bookkeeping shared by plain and speculative
+        decode rounds: TTFT stamps, the stream tap, completion handling.
+        Device reads are whole-array pulls sliced host-side — an eager
+        per-completion ``state["out"][slot, :n]`` compiles a fresh tiny
+        executable per (slot, n) shape, which is exactly the cold-probe
+        capacity cost the open-loop bench used to dodge with a throwaway
+        warm pass."""
         active = np.asarray(self._state["active"])       # the one host sync
         now = time.perf_counter()
         for r in slots.values():
-            # every budget>0 member sampled a token in the round above;
+            # every budget>0 member banked >= 1 token in the round above;
             # budget-0 requests never produce one and get no TTFT
             if r.ttft_s == 0.0 and r.max_new_tokens > 0:
                 r.ttft_s = now - r.submit_s
+        finished = [s for s in slots if not active[s]]
+        if self.on_tokens is not None or finished:
+            if steps_h is None:
+                steps_h = np.asarray(self._state["steps"])
+            if out_h is None:
+                out_h = np.asarray(self._state["out"])
         if self.on_tokens is not None:
             # stream tap: surface this round's new tokens per live request
             # (the host sync above already landed, so the arrays are final
-            # for the round; a row that hit EOS mid-scan stopped at its
+            # for the round; a row that finished mid-round stopped at its
             # true step count). Rides the same sync — no extra round-trip
             # boundary, just two host pulls the gateway opted into.
-            steps_h = np.asarray(self._state["steps"])
-            out_h = np.asarray(self._state["out"])
             events = []
             for slot, r in slots.items():
                 n = int(steps_h[slot])
@@ -1172,12 +1538,14 @@ class ServingEngine:
                     self._emitted[r.request_id] = n
             if events:
                 self.on_tokens(events)
-        for slot in [s for s, _ in slots.items() if not active[s]]:
+        for slot in finished:
             r = slots.pop(slot)
             self._scanned.pop(slot, None)
             self._emitted.pop(r.request_id, None)
-            n = int(self._state["steps"][slot])
-            r.output = np.asarray(self._state["out"][slot, :n])
+            if self.speculative:
+                self._draft_dirty.discard(slot)
+            n = int(steps_h[slot])
+            r.output = np.array(out_h[slot, :n])
             r.status = "done"
             r.finish_s = time.perf_counter()
             r.latency_s = r.finish_s - r.submit_s
@@ -1208,8 +1576,13 @@ class ServingEngine:
         return useful / max(self.planned_token_slots, 1)
 
     def hbm_bytes(self) -> int:
-        """Device-resident KV-cache footprint of this engine."""
-        return self.backend.hbm_bytes()
+        """Device-resident KV-cache footprint of this engine (draft-model
+        cache included when speculation is on — its ring lines are real
+        HBM the operator pays for)."""
+        total = self.backend.hbm_bytes()
+        if self.speculative:
+            total += self._draft_backend.hbm_bytes()
+        return total
 
 
 class DrainBatchEngine:

@@ -18,6 +18,10 @@ seam                  trips
 ====================  =====================================================
 ``step``              the single-step decode dispatch (``_step_impl``)
 ``scan``              the multi-step decode dispatch (``_scan_impl``)
+``draft``             the speculative draft+verify dispatch
+                      (``_spec_impl``) — the engine serves the round
+                      through the plain decode path instead (token
+                      streams are unchanged; throughput degrades)
 ``swap_out``          ``PagedCache.swap_out`` during preemption/rollback
 ``swap_in``           ``PagedCache.swap_in`` during a swap-path resume
 ``pool``              transient block-pool exhaustion at admission

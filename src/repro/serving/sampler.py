@@ -52,6 +52,22 @@ def sample_logits_keyed(keys, logits, temperature, *,
     return jnp.where(temperature > 0.0, sampled, greedy)
 
 
+def accepted_prefix_length(proposed, target) -> jnp.ndarray:
+    """Longest accepted prefix for key-coupled speculative verification.
+
+    ``proposed`` and ``target`` are (B, k) int32: the draft's proposals
+    and the tokens the target model samples at the same (request, step)
+    keys off its own verify logits. Because draft and target share the
+    folded key schedule, acceptance is simply agreement — a proposal is
+    right iff it equals the token the baseline engine would have sampled
+    there — and the accepted prefix ends at the first disagreement.
+    Returns (B,) int32 in [0, k]: cumprod turns the boolean match row
+    into 1s up to the first 0, and the sum counts them.
+    """
+    match = (proposed == target).astype(jnp.int32)
+    return jnp.sum(jnp.cumprod(match, axis=-1), axis=-1).astype(jnp.int32)
+
+
 def sample_logits_batch(rng, logits, temperature, *,
                         top_k: int = 0) -> jnp.ndarray:
     """Vectorized sampling with per-row temperature (continuous batching

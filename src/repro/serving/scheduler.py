@@ -141,10 +141,13 @@ class StepPlan:
     plan time would already be stale. ``decode_steps`` is the decode
     horizon: how many fused decode steps the engine scans before its next
     host sync (1 unless multi-step decode is enabled and no prefill work
-    is pending)."""
+    is pending). ``spec_tokens`` is the speculative draft depth: > 0 asks
+    a draft-equipped engine to run one propose-k/verify round instead of
+    the scan (``decode_steps`` is then its non-speculative fallback)."""
     chunks: Tuple[ChunkTask, ...]
     admitted: int         # requests granted a slot this step
     decode_steps: int = 1  # fused decode steps per host sync this round
+    spec_tokens: int = 0   # draft depth k for a speculative decode round
 
 
 def chunk_buckets(chunk_tokens: int, min_bucket: int = 8) -> List[int]:
@@ -179,7 +182,10 @@ class Scheduler:
                  token_budget: Optional[int] = None, min_bucket: int = 8,
                  max_decode_steps: int = 1,
                  admission_policy: Optional[str] = None,
-                 service_ewma_alpha: float = 0.25):
+                 service_ewma_alpha: float = 0.25,
+                 speculative_tokens: int = 0,
+                 spec_min_commit: float = 1.25,
+                 spec_probe_every: int = 32):
         self.batch_slots = batch_slots
         self.chunk_tokens = chunk_tokens
         if admission_policy not in (None, "reject", "downgrade"):
@@ -203,6 +209,25 @@ class Scheduler:
             k *= 2
         ks.append(max_decode_steps)
         self.k_schedule = ks
+        # speculative draft depths the engine may be asked to run: same
+        # pow2-up-to-and-including-max shape as k_schedule, empty when the
+        # engine carries no draft model
+        if speculative_tokens < 0:
+            raise ValueError(
+                f"speculative_tokens must be >= 0 (got {speculative_tokens})")
+        self.speculative_tokens = speculative_tokens
+        sk: List[int] = []
+        k = 1
+        while k < speculative_tokens:
+            sk.append(k)
+            k *= 2
+        if speculative_tokens > 0:
+            sk.append(speculative_tokens)
+        self.spec_schedule = sk
+        self.spec_min_commit = spec_min_commit
+        self.spec_probe_every = max(1, spec_probe_every)
+        self._spec_ewma: Optional[float] = None  # accepted proposals / slot-round
+        self._spec_suppressed = 0
         if chunk_tokens is None:
             self.token_budget = None
             self.buckets: List[int] = []
@@ -288,6 +313,55 @@ class Scheduler:
         wait = ahead * s / self.batch_slots
         return wait + s <= deadline_s
 
+    # -- speculative draft-depth policy ---------------------------------------
+    def observe_speculation(self, slot_rounds: int, drafted: int,
+                            accepted: int) -> None:
+        """Fold one speculative round's outcome into the acceptance EWMA.
+        ``slot_rounds`` is how many active slots the round covered,
+        ``drafted`` the proposals issued (slots × k), ``accepted`` how
+        many of them the target kept. The tracked quantity is accepted
+        proposals per slot-round: a speculative dispatch commits
+        ``1 + that`` tokens per slot, which is what ``_spec_horizon``
+        compares against a plain step's guaranteed 1."""
+        if slot_rounds <= 0:
+            return
+        m = accepted / slot_rounds
+        a = self._ewma_alpha
+        self._spec_ewma = m if self._spec_ewma is None \
+            else (1.0 - a) * self._spec_ewma + a * m
+
+    def speculative_acceptance(self) -> Optional[float]:
+        """Current acceptance EWMA (accepted proposals per slot-round),
+        or None before any speculative round ran."""
+        return self._spec_ewma
+
+    def _spec_horizon(self, busy_prefill: bool,
+                      min_headroom: Optional[int]) -> int:
+        """Draft depth k for this round, 0 meaning run non-speculative.
+        Collapses while prefill work is pending (same TTFT argument as
+        ``_decode_horizon``), when the smallest active budget leaves no
+        room to commit more than the anchor token, and when the
+        acceptance EWMA says a speculative dispatch commits fewer than
+        ``spec_min_commit`` tokens per slot — drafting then costs draft
+        FLOPs for less than a plain step delivers. Suppression re-probes
+        every ``spec_probe_every`` suppressed plans so a workload shift
+        (e.g. the repetitive tail of a trace) can win speculation back."""
+        if not self.spec_schedule or busy_prefill:
+            return 0
+        cap = self.speculative_tokens
+        if min_headroom is not None:
+            # committing k proposals + the anchor never overruns the
+            # tightest budget: clamp k to headroom - 1
+            cap = min(cap, min_headroom - 1)
+        if cap < 1:
+            return 0
+        if self._spec_ewma is not None \
+                and 1.0 + self._spec_ewma < self.spec_min_commit:
+            self._spec_suppressed += 1
+            if self._spec_suppressed % self.spec_probe_every:
+                return 0
+        return max(k for k in self.spec_schedule if k <= cap)
+
     def _decode_horizon(self, busy_prefill: bool,
                         min_headroom: Optional[int]) -> int:
         """Fused decode steps for this round. Collapses to 1 while prefill
@@ -334,7 +408,8 @@ class Scheduler:
                     continue                 # freed a slot: retry admission
                 break
             return StepPlan((), admitted,
-                            self._decode_horizon(admitted > 0, min_headroom))
+                            self._decode_horizon(admitted > 0, min_headroom),
+                            self._spec_horizon(admitted > 0, min_headroom))
 
         budget = self.token_budget
         spent = n_active                     # decode tokens this step
@@ -382,4 +457,5 @@ class Scheduler:
             spent = plan_for(pp, spent)
         busy_prefill = bool(chunks) or bool(prefilling) or admitted > 0
         return StepPlan(tuple(chunks), admitted,
-                        self._decode_horizon(busy_prefill, min_headroom))
+                        self._decode_horizon(busy_prefill, min_headroom),
+                        self._spec_horizon(busy_prefill, min_headroom))

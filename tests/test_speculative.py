@@ -1,0 +1,302 @@
+"""Speculative decoding: edge-model draft, chunked verify, key-coupled
+acceptance.
+
+The acceptance contract is *stream equality*: because verification is
+key-coupled (draft and target sample through the same per-(request, step)
+folded keys, and a proposal is accepted iff it equals the token the
+target samples there), every committed token is a baseline token — so
+speculative output must be token-for-token identical to the K=1
+non-speculative engine at **every** temperature, on every cache
+configuration, under draft-seam chaos, at any acceptance rate. Draft
+quality may only move throughput, never a single token.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, dense_stages
+from repro.models.model import LM
+from repro.serving import ServingEngine
+from repro.serving.faults import FaultPlan
+from repro.serving.scheduler import Scheduler
+
+
+def _cfg(layers, name, vocab=64):
+    return ModelConfig(
+        name=name, family="dense", source="t", num_layers=layers,
+        d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        vocab_size=vocab, stages=dense_stages(layers),
+        param_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def models():
+    tgt = LM(_cfg(2, "tgt"), kv_chunk=8)
+    tp, _ = tgt.init(jax.random.PRNGKey(0))
+    drf = LM(_cfg(1, "drf"), kv_chunk=8)
+    dp, _ = drf.init(jax.random.PRNGKey(7))
+    return tgt, tp, drf, dp
+
+
+def _trace(n=8, seed=2, budgets=(3, 24), span=(3, 20)):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 60, size=int(rng.integers(*span))),
+             int(rng.integers(*budgets))) for _ in range(n)]
+
+
+def _run(lm, params, trace, temperature=0.0, force_spec=False, eos_id=5,
+         **kw):
+    eng = ServingEngine(lm, params, max_seq_len=64, min_bucket=4,
+                        batch_slots=4, eos_id=eos_id, **kw)
+    if force_spec:
+        # keep speculating at any acceptance rate: the exactness tests
+        # must exercise the rejection-heavy paths the EWMA policy would
+        # otherwise (correctly) turn off for a random, unaligned draft
+        eng.scheduler.spec_min_commit = 0.0
+    for prompt, max_new in trace:
+        eng.submit(prompt, max_new_tokens=max_new, temperature=temperature)
+    return eng, {rid: r.output for rid, r in eng.run().items()}
+
+
+def _assert_same(a, b):
+    assert set(a) == set(b)
+    for rid in a:
+        np.testing.assert_array_equal(a[rid], b[rid])
+
+
+CONFIGS = {
+    "ring": {},
+    "paged": dict(cache_backend="paged", block_size=8),
+    "chunked": dict(chunk_tokens=8),
+    "paged_chunked_multistep": dict(cache_backend="paged", block_size=8,
+                                    chunk_tokens=8, max_decode_steps=4),
+}
+
+
+# ---------------------------------------------------------------------------
+# stream equality: greedy and sampled, every configuration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_spec_matches_baseline(models, name, temperature):
+    tgt, tp, drf, dp = models
+    kw = CONFIGS[name]
+    trace = _trace()
+    _, base = _run(tgt, tp, trace, temperature, **kw)
+    eng, spec = _run(tgt, tp, trace, temperature, force_spec=True,
+                     draft_model=drf, draft_params=dp,
+                     speculative_tokens=4, **kw)
+    _assert_same(base, spec)
+    m = eng.speculative_metrics()
+    assert m["enabled"] and m["rounds"] > 0 and m["drafted_tokens"] > 0
+    # anchors always commit: a speculative dispatch never banks < 1 token
+    assert m["committed_per_dispatch"] >= 1.0
+
+
+def test_spec_exact_under_heavy_rejection(models):
+    """Greedy with an unaligned random draft rejects essentially every
+    proposal — the worst case for the carry/cache bookkeeping (every
+    round rewinds to the anchor) — and must still be stream-exact."""
+    tgt, tp, drf, dp = models
+    trace = _trace(seed=9)
+    _, base = _run(tgt, tp, trace, 0.0)
+    eng, spec = _run(tgt, tp, trace, 0.0, force_spec=True,
+                     draft_model=drf, draft_params=dp, speculative_tokens=4)
+    _assert_same(base, spec)
+    assert eng.spec_rounds > 5
+
+
+def test_self_draft_accepts_everything(models):
+    """A draft identical to the target proposes exactly the baseline
+    tokens, so every proposal is accepted: acceptance is exactly 1.0 and
+    committed tokens per dispatch approach k+1. EOS is disabled — an EOS
+    inside the chunk truncates the commit, turning matched proposals
+    past it into drafted-but-not-accepted accounting noise."""
+    tgt, tp, _, _ = models
+    trace = _trace(budgets=(16, 25))
+    _, base = _run(tgt, tp, trace, 0.0, eos_id=None)
+    eng, spec = _run(tgt, tp, trace, 0.0, eos_id=None, draft_model=tgt,
+                     draft_params=tp, speculative_tokens=4)
+    _assert_same(base, spec)
+    m = eng.speculative_metrics()
+    assert m["acceptance_rate"] == 1.0
+    assert m["committed_per_dispatch"] > 2.0
+
+
+# ---------------------------------------------------------------------------
+# sampled streams: co-scheduling invariance and distribution sanity
+# ---------------------------------------------------------------------------
+
+def test_sampled_spec_invariant_to_coscheduling(models):
+    """A sampled request's stream is a pure function of (request_id,
+    step): serving the trace all-at-once vs trickled in must produce
+    identical outputs even though speculation batches different slot
+    sets (and collapses at different plan steps) in the two runs."""
+    tgt, tp, drf, dp = models
+    trace = _trace(seed=4)
+    kw = dict(force_spec=True, draft_model=drf, draft_params=dp,
+              speculative_tokens=4)
+    _, together = _run(tgt, tp, trace, 0.8, **kw)
+    eng = ServingEngine(tgt, tp, max_seq_len=64, min_bucket=4,
+                        batch_slots=4, eos_id=5, draft_model=drf,
+                        draft_params=dp, speculative_tokens=4)
+    eng.scheduler.spec_min_commit = 0.0
+    trickled = {}
+    for prompt, max_new in trace:
+        eng.submit(prompt, max_new_tokens=max_new, temperature=0.8)
+        eng.step()            # staggered admission: different co-batching
+    trickled.update({rid: r.output for rid, r in eng.run().items()})
+    _assert_same(together, trickled)
+
+
+def test_sampled_spec_first_token_distribution(models):
+    """Distribution sanity for the coupled sampler: over many request
+    ids, speculative first tokens off a shared prompt follow the
+    target's softmax (the coupling commits only target-keyed samples, so
+    the draft cannot tilt the distribution — only the key stream varies
+    per rid)."""
+    tgt, tp, drf, dp = models
+    prompt = np.array([3, 11, 7], np.int32)
+    eng = ServingEngine(tgt, tp, max_seq_len=64, min_bucket=4,
+                        batch_slots=4, draft_model=drf, draft_params=dp,
+                        speculative_tokens=4)
+    eng.scheduler.spec_min_commit = 0.0
+    n = 256
+    for _ in range(n):
+        eng.submit(prompt, max_new_tokens=2, temperature=1.0)
+    firsts = np.array([r.output[0] for r in eng.run().values()])
+    logits, _ = tgt.prefill(tp, {"tokens": prompt[None, :]}, cache_width=64)
+    p = np.asarray(jax.nn.softmax(np.asarray(logits[0, -1])
+                                  .astype(np.float64)))
+    # chi-square over 8 equal-mass bins (TV over the full padded vocab is
+    # too noisy at this n): a systematically-wrong sampler — wrong
+    # temperature, draft-tilted acceptance — lands in the hundreds,
+    # while a correct one stays near df = 7
+    order = np.argsort(-p)
+    left = np.cumsum(p[order]) - p[order]       # mass strictly before token
+    tok_bin = np.empty(len(p), np.int64)
+    tok_bin[order] = np.minimum((left * 8).astype(np.int64), 7)
+    obs = np.bincount(tok_bin[firsts], minlength=8).astype(np.float64)
+    exp = np.bincount(tok_bin, weights=p, minlength=8) * n
+    chi2 = float(((obs - exp) ** 2 / np.maximum(exp, 1e-9)).sum())
+    assert chi2 < 40.0, chi2
+
+
+# ---------------------------------------------------------------------------
+# chaos: the draft seam degrades throughput, never output
+# ---------------------------------------------------------------------------
+
+def test_draft_seam_chaos_exact_and_drains(models):
+    tgt, tp, drf, dp = models
+    trace = _trace(seed=6)
+    _, base = _run(tgt, tp, trace, 0.7)
+    plan = FaultPlan(seed=3, draft={"prob": 0.5})
+    eng, spec = _run(tgt, tp, trace, 0.7, force_spec=True,
+                     draft_model=drf, draft_params=dp, speculative_tokens=4,
+                     fault_plan=plan)
+    _assert_same(base, spec)                 # survivors (= everyone) exact
+    assert eng.spec_fallbacks > 0            # chaos actually hit the seam
+    assert not eng.pending                   # clean drain
+    m = eng.metrics()
+    assert m["terminal"] == {"done": len(trace)}
+    assert m["faults_injected"].get("draft", 0) == eng.spec_fallbacks
+    assert m["speculative"]["fallbacks"] == eng.spec_fallbacks
+
+
+# ---------------------------------------------------------------------------
+# warm_compile: every speculative executable pre-built, none added later
+# ---------------------------------------------------------------------------
+
+def test_warm_compile_covers_speculative_and_sampled(models):
+    tgt, tp, drf, dp = models
+    eng = ServingEngine(tgt, tp, max_seq_len=64, min_bucket=4,
+                        batch_slots=4, eos_id=5, chunk_tokens=8,
+                        max_decode_steps=4, draft_model=drf,
+                        draft_params=dp, speculative_tokens=4)
+    eng.scheduler.spec_min_commit = 0.0
+    eng.warm_compile()
+    sched = eng.scheduler
+    fns = {
+        "_step_fn": (eng._step_fn, 1),
+        "_scan_fn": (eng._scan_fn,
+                     len([k for k in sched.k_schedule if k > 1])),
+        "_spec_fn": (eng._spec_fn, len(sched.spec_schedule)),
+        "_draft_fill_fn": (eng._draft_fill_fn, len(eng.buckets)),
+    }
+    for name, (fn, expect) in fns.items():
+        assert fn._cache_size() == expect, name
+    chunk_compiles = eng._chunk_fn._cache_size()
+    # sampled traffic (temperature > 0) through every decode path must
+    # not compile anything new — the cold-probe cost the open-loop bench
+    # used to dodge with a throwaway warm pass
+    for prompt, max_new in _trace(seed=11):
+        eng.submit(prompt, max_new_tokens=max_new, temperature=0.9)
+    eng.run()
+    for name, (fn, expect) in fns.items():
+        assert fn._cache_size() == expect, f"{name} compiled post-warm"
+    assert eng._chunk_fn._cache_size() == chunk_compiles
+
+
+# ---------------------------------------------------------------------------
+# non-speculative engines and validation
+# ---------------------------------------------------------------------------
+
+def test_non_speculative_metrics_shape(models):
+    tgt, tp, _, _ = models
+    eng = ServingEngine(tgt, tp, max_seq_len=64, min_bucket=4)
+    m = eng.metrics()["speculative"]
+    assert m["enabled"] is False and m["rounds"] == 0
+    assert m["acceptance_rate"] == 0.0 and m["per_class"] == {}
+
+
+def test_speculative_validation(models):
+    tgt, tp, drf, dp = models
+    with pytest.raises(ValueError, match="needs a draft_model"):
+        ServingEngine(tgt, tp, max_seq_len=64, speculative_tokens=2)
+    with pytest.raises(ValueError, match="draft_params"):
+        ServingEngine(tgt, tp, max_seq_len=64, draft_model=drf,
+                      speculative_tokens=2)
+    # padded_vocab rounds to a multiple of 256, so the draft's vocab must
+    # land in a different 256-bucket than the target's (64 -> 256) for
+    # the padded-logit comparison to be genuinely incompatible
+    big = LM(_cfg(1, "bigvocab", vocab=300), kv_chunk=8)
+    bp, _ = big.init(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="vocab"):
+        ServingEngine(tgt, tp, max_seq_len=64, draft_model=big,
+                      draft_params=bp, speculative_tokens=2)
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy
+# ---------------------------------------------------------------------------
+
+def test_spec_schedule_shape():
+    s = Scheduler(batch_slots=4, speculative_tokens=6)
+    assert s.spec_schedule == [1, 2, 4, 6]
+    assert Scheduler(batch_slots=4).spec_schedule == []
+
+
+def test_spec_horizon_collapses_for_prefill_and_headroom():
+    s = Scheduler(batch_slots=4, speculative_tokens=4)
+    assert s._spec_horizon(False, 16) == 4
+    assert s._spec_horizon(True, 16) == 0        # prefill pending: TTFT wins
+    # headroom clamps k so anchor + proposals never overrun the budget
+    assert s._spec_horizon(False, 3) == 2
+    assert s._spec_horizon(False, 1) == 0        # only the anchor would fit
+    assert s._spec_horizon(False, None) == 4
+
+
+def test_spec_ewma_suppression_and_probe():
+    s = Scheduler(batch_slots=4, speculative_tokens=4, spec_probe_every=5)
+    # poor acceptance: drafting commits ~1.0/dispatch < spec_min_commit
+    for _ in range(8):
+        s.observe_speculation(4, 16, 0)
+    picks = [s._spec_horizon(False, 16) for _ in range(10)]
+    assert picks.count(0) == 8                   # suppressed...
+    assert picks.count(4) == 2                   # ...but re-probed on cadence
+    # strong acceptance wins speculation back
+    for _ in range(8):
+        s.observe_speculation(4, 16, 14)
+    assert s._spec_horizon(False, 16) == 4
+    assert s.speculative_acceptance() > 1.0
