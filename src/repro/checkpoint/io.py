@@ -4,6 +4,18 @@ Flat key-path encoding keeps the format structure-agnostic: a checkpoint can
 be restored into any pytree with the same key paths (used by the federated
 trainer and the serving engine alike). Atomic rename guards against torn
 writes; ``keep`` bounds disk usage.
+
+Two load shapes:
+
+- ``load_checkpoint(dir, template)`` — restore into a known structure
+  (exact key-path match, dtypes coerced to the template's). The training
+  path: the caller always holds a params pytree of the right shape.
+- ``load_checkpoint_tree(dir)`` — reconstruct nested string-keyed dicts
+  straight from the flat key paths, no template. The serving-durability
+  path: an engine snapshot's structure (which requests were live, which
+  carried a K/V checkpoint) is data, so a cold restart cannot know it in
+  advance. Non-array metadata rides as a JSON-encoded ``uint8`` leaf
+  (``json_leaf``/``json_unleaf``).
 """
 from __future__ import annotations
 
@@ -57,6 +69,40 @@ def load_checkpoint(directory: str, template: Any,
         np.asarray(v, dtype=np.asarray(t).dtype)
         for v, t in zip(leaves_in_order, jax.tree.leaves(template))])
     return restored, step
+
+
+def load_checkpoint_tree(directory: str,
+                         step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore a checkpoint as plain nested dicts, no template: each flat
+    key path ``a/b/c`` becomes ``tree["a"]["b"]["c"]``. Dict keys must not
+    contain ``/`` (``save_checkpoint`` writers that intend template-free
+    restore own that constraint)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step}.npz")
+    tree: dict = {}
+    with np.load(path) as data:
+        for key in data.files:
+            parts = key.split("/")
+            node = tree
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = data[key]
+    return tree, step
+
+
+def json_leaf(obj: Any) -> np.ndarray:
+    """Encode a JSON-able object as a ``uint8`` array leaf, so variable
+    host-side metadata (request fields, counters) can ride the same .npz
+    envelope as the numeric state."""
+    return np.frombuffer(json.dumps(obj).encode("utf-8"),
+                         np.uint8).copy()
+
+
+def json_unleaf(arr: np.ndarray) -> Any:
+    return json.loads(np.asarray(arr, np.uint8).tobytes().decode("utf-8"))
 
 
 def latest_step(directory: str) -> Optional[int]:

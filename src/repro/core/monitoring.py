@@ -43,6 +43,44 @@ class MonitoringService(EventLog):
         evs = self.query("serving_metrics", component=component)
         return evs[-1]["snapshot"] if evs else None
 
+    def feed_deadline_admission(self, component: str, scheduler) -> bool:
+        """Close the admission loop (ISSUE 9): push the latest *measured*
+        per-class deadline-hit table back into the scheduler's admission
+        estimator (``Scheduler.absorb_deadline_hits``), where it widens
+        the feasibility safety margin for classes that are missing in
+        practice. Call after ``record_serving``; after a crash-restart,
+        call it again once the recovered engine has fresh observations —
+        ``restore()`` resets the estimator (pre-crash rates describe a
+        dead process), so the margin re-learns from the monitor's feed.
+        Returns False when no snapshot exists yet for ``component``."""
+        table = self.deadline_hit_rates(component)
+        if not table:
+            return False
+        scheduler.absorb_deadline_hits(table)
+        return True
+
+    # -- durability events ----------------------------------------------------
+    def record_restart(self, component: str, info: Dict) -> None:
+        """One supervised crash-restart: ``info`` is what
+        ``serving.recover_engine`` returned (snapshot counts + journal
+        replay counts)."""
+        self.log("restart", component=component, info=info)
+
+    def record_hang(self, component: str, detail: str = "") -> None:
+        """One watchdog-detected hang (timeout fired, whether the step
+        later completed or the engine was declared wedged)."""
+        self.log("hang", component=component, detail=detail)
+
+    def record_journal(self, component: str, counts: Dict) -> None:
+        """A journal replay's outcome (``RequestJournal.replay``)."""
+        self.log("journal_replay", component=component, counts=counts)
+
+    def durability_counters(self) -> Dict[str, int]:
+        """Fleet-wide durability tallies for dashboards/tests."""
+        return {"restarts": self.counters("restart"),
+                "hangs": self.counters("hang"),
+                "journal_replays": self.counters("journal_replay")}
+
     def deadline_hit_rates(self, component: str) -> Optional[Dict]:
         """Per-class deadline-hit rates from the latest serving snapshot:
         ``{priority: {"hits", "total", "rate"}}`` — the feedback signal

@@ -10,11 +10,26 @@ Arrivals are an open-loop Poisson process (``--rate`` req/s, independent
 of service rate), each request streamed as its tokens land; under
 ``--rate`` beyond capacity the gateway's bounded queue and backpressure
 policy decide who waits, who is shed, and who is refused.
+
+Durability (--supervise): the gateway runs with a write-ahead request
+journal, periodic engine snapshots, and a wall-clock watchdog on every
+dispatch. Two demo fault modes exercise the recovery ladder end to end:
+
+    --hang-demo    a dispatch stalls briefly — the watchdog times out,
+                   the late step is rolled back through the retry path
+                   (note_hang), and service continues in-process
+    --wedge-demo   a dispatch stalls past the grace window — the driver
+                   raises EngineWedgedError, and the supervisor restarts
+                   from snapshot + journal; recovered requests finish
+                   token-exact, crash-lost ones are replayed
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import os
+import tempfile
+from collections import Counter
 
 import jax
 import numpy as np
@@ -22,11 +37,14 @@ import numpy as np
 from repro.cascade.ecc_infer import CascadeLM, edge_variant
 from repro.cascade.gate import make_thresholds
 from repro.configs import get_config
+from repro.core.monitoring import MonitoringService
 from repro.models.model import LM
-from repro.serving import CascadeServingEngine, ServingEngine, ServingGateway
+from repro.serving import (CascadeServingEngine, EngineWedgedError,
+                           FaultPlan, RequestJournal, ServingEngine,
+                           ServingGateway, recover_engine)
 
 
-def _build_engine(cfg, args):
+def _build_engine(cfg, args, fault_plan=None):
     if args.cascade:
         edge_cfg = edge_variant(cfg, layers=1)
         cloud, edge = LM(cfg, kv_chunk=32), LM(edge_cfg, kv_chunk=32)
@@ -35,10 +53,11 @@ def _build_engine(cfg, args):
         cascade = CascadeLM(edge, cloud,
                             thresholds=make_thresholds(hi=0.01, lo=0.001))
         return CascadeServingEngine(cascade, ep, cp, batch_slots=4,
-                                    max_seq_len=96)
+                                    max_seq_len=96, fault_plan=fault_plan)
     lm = LM(cfg, kv_chunk=32)
     params, _ = lm.init(jax.random.PRNGKey(0))
-    return ServingEngine(lm, params, batch_slots=4, max_seq_len=96)
+    return ServingEngine(lm, params, batch_slots=4, max_seq_len=96,
+                         fault_plan=fault_plan)
 
 
 async def _client(gw: ServingGateway, prompt, max_new: int,
@@ -59,33 +78,86 @@ async def _client(gw: ServingGateway, prompt, max_new: int,
     return {"status": r.status, "streamed": len(toks)}
 
 
+def _demo_fault_plan(args):
+    """The two watchdog demos differ only in stall length relative to the
+    watchdog deadline: a hang completes late (in-process rollback via
+    note_hang), a wedge never completes within grace (supervised
+    restart)."""
+    if args.wedge_demo:
+        return FaultPlan(hang=[2],
+                         hang_s=args.step_timeout * (1.0 + args.hang_grace)
+                         + 2.0)
+    if args.hang_demo:
+        return FaultPlan(hang=[2], hang_s=args.step_timeout * 1.5)
+    return None
+
+
 async def _serve(args) -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     rng = np.random.default_rng(0)
-    eng = _build_engine(cfg, args)
+    monitor = MonitoringService()
 
-    async with ServingGateway(eng, max_queue=args.max_queue,
-                              policy=args.policy) as gw:
-        clients = []
-        for i in range(args.requests):
-            prompt = rng.integers(0, min(1000, cfg.vocab_size),
-                                  size=4 + i % 5)
-            priority = i % 2 if args.classes > 1 else 0
-            clients.append(asyncio.create_task(_client(
-                gw, prompt, args.max_new, priority,
-                args.deadline if priority else None, args.quiet)))
-            # open loop: exponential inter-arrivals at --rate req/s,
-            # drawn independently of how fast the engine is serving
-            await asyncio.sleep(float(rng.exponential(1.0 / args.rate)))
-        results = await asyncio.gather(*clients)
+    journal = None
+    gw_kw = {}
+    if args.supervise:
+        state_dir = args.state_dir or tempfile.mkdtemp(
+            prefix="repro_serve_")
+        journal = RequestJournal(os.path.join(state_dir, "journal.jsonl"))
+        gw_kw = dict(journal=journal,
+                     snapshot_dir=os.path.join(state_dir, "snapshots"),
+                     snapshot_every=args.snapshot_every,
+                     step_timeout_s=args.step_timeout,
+                     hang_grace=args.hang_grace)
+        print(f"supervised: state in {state_dir}")
+    eng = _build_engine(cfg, args, fault_plan=_demo_fault_plan(args))
 
-    by_status: dict = {}
-    for res in results:
-        by_status[res["status"]] = by_status.get(res["status"], 0) + 1
+    results, wedged = [], None
+    gw = ServingGateway(eng, max_queue=args.max_queue,
+                        policy=args.policy, **gw_kw)
+    try:
+        async with gw:
+            clients = []
+            for i in range(args.requests):
+                prompt = rng.integers(0, min(1000, cfg.vocab_size),
+                                      size=4 + i % 5)
+                priority = i % 2 if args.classes > 1 else 0
+                clients.append(asyncio.create_task(_client(
+                    gw, prompt, args.max_new, priority,
+                    args.deadline if priority else None, args.quiet)))
+                # open loop: exponential inter-arrivals at --rate req/s,
+                # drawn independently of how fast the engine is serving
+                await asyncio.sleep(float(rng.exponential(1.0 / args.rate)))
+            results = await asyncio.gather(*clients)
+    except EngineWedgedError as e:
+        wedged = e
+        monitor.record_hang("serve", detail=str(e))
+
+    by_status = Counter(res["status"] for res in results)
     print(f"served {len(results)} arrivals at {args.rate:.0f} req/s: "
-          f"{by_status}  gateway={gw.stats()}")
+          f"{dict(by_status)}  gateway={gw.stats()}")
+
+    if wedged is not None:
+        if not args.supervise:
+            raise wedged
+        # supervised restart: the wedged engine's thread is a write-off —
+        # recover a *fresh* engine from the last snapshot + journal and
+        # drain the surviving work synchronously (token-exact resumes;
+        # crash-lost acknowledged submits restart from their prompts)
+        print(f"engine wedged ({wedged}); restarting from snapshot")
+        eng2 = _build_engine(cfg, args)
+        info = recover_engine(eng2, snapshot_dir=gw_kw["snapshot_dir"],
+                              journal=journal)
+        monitor.record_restart("serve", info)
+        monitor.record_journal("serve", info["replayed"])
+        done = eng2.run()
+        statuses = Counter(r.status for r in done.values())
+        print(f"recovered {info['restored']} + replayed "
+              f"{info['replayed']}; post-restart drain: {dict(statuses)}")
+        print(f"durability: {monitor.durability_counters()}")
+    if journal is not None:
+        journal.close()
 
 
 def main() -> None:
@@ -106,7 +178,25 @@ def main() -> None:
     ap.add_argument("--deadline", type=float, default=None,
                     help="relative deadline (s) for class-1 arrivals")
     ap.add_argument("--quiet", action="store_true")
+    # durability (ISSUE 9)
+    ap.add_argument("--supervise", action="store_true",
+                    help="journal + periodic snapshots + watchdog; on "
+                         "EngineWedgedError, restart from snapshot")
+    ap.add_argument("--state-dir", default=None,
+                    help="journal/snapshot directory (default: tmpdir)")
+    ap.add_argument("--step-timeout", type=float, default=5.0,
+                    help="watchdog wall-clock deadline per dispatch (s)")
+    ap.add_argument("--hang-grace", type=float, default=1.0,
+                    help="grace window as a multiple of --step-timeout")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="engine steps between periodic snapshots")
+    ap.add_argument("--hang-demo", action="store_true",
+                    help="inject a recoverable dispatch stall")
+    ap.add_argument("--wedge-demo", action="store_true",
+                    help="inject a stall past grace (supervised restart)")
     args = ap.parse_args()
+    if args.hang_demo or args.wedge_demo:
+        args.supervise = True
     asyncio.run(_serve(args))
 
 

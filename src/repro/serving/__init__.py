@@ -1,10 +1,13 @@
 from repro.serving.engine import (DrainBatchEngine, Request, ServingEngine,
+                                  load_snapshot, save_snapshot,
                                   validate_prompt)
 from repro.serving.cascade_engine import (CascadeEngine, CascadeServingEngine,
                                           CircuitBreaker)
 from repro.serving.faults import FaultError, FaultPlan, SeamSpec
-from repro.serving.gateway import (BACKPRESSURE_POLICIES, RequestHandle,
-                                   ServingGateway)
+from repro.serving.gateway import (BACKPRESSURE_POLICIES, EngineWedgedError,
+                                   RequestHandle, ServingGateway,
+                                   recover_engine)
+from repro.serving.journal import RequestJournal
 from repro.serving.kv_cache import (KVCacheBackend, PagedCache, PagedLayout,
                                     RING, RingCache, RingLayout, make_backend)
 from repro.serving.sampler import (accepted_prefix_length, request_keys,
@@ -18,6 +21,8 @@ __all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
            "CascadeServingEngine", "CircuitBreaker",
            "FaultPlan", "FaultError", "SeamSpec",
            "ServingGateway", "RequestHandle", "BACKPRESSURE_POLICIES",
+           "EngineWedgedError", "recover_engine", "RequestJournal",
+           "save_snapshot", "load_snapshot",
            "sample_logits", "sample_logits_batch",
            "sample_logits_keyed", "request_keys", "accepted_prefix_length",
            "prompt_buckets", "bucket_for", "chunk_buckets",

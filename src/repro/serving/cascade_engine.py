@@ -224,6 +224,9 @@ class CascadeServingEngine:
         self._cloud_map: Dict[int, CascadeRequest] = {}
         self._done: Dict[int, CascadeRequest] = {}
         self._on_tokens = None
+        # durability counters (cascade-level; the legs keep their own)
+        self.restores = 0
+        self.hang_recoveries = 0
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                temperature: float = 0.0, priority: int = 0,
@@ -459,7 +462,8 @@ class CascadeServingEngine:
 
     def engine_metrics(self) -> Dict[str, object]:
         """Monitoring snapshot across the cascade: routing/WAN counters,
-        breaker state, and both inner engines' ``metrics()``."""
+        breaker state, durability counters, and both inner engines'
+        ``metrics()``."""
         m = self.metrics
         return {
             "queries": m.queries, "accepted": m.accepted,
@@ -471,6 +475,163 @@ class CascadeServingEngine:
                         "consecutive_failures":
                             self.breaker.consecutive_failures},
             "degradation_s": self._degradation_s,
+            "restores": self.restores,
+            "hang_recoveries": self.hang_recoveries,
             "edge": self.edge_engine.metrics(),
             "cloud": self.cloud_engine.metrics(),
         }
+
+    def warm_compile(self) -> None:
+        """Pre-compile both legs (the gateway's watchdog warm-up seam —
+        see ``ServingEngine.warm_compile``). The gate's prefill shares
+        the edge engine's bucket set, so it is warmed implicitly."""
+        self.edge_engine.warm_compile()
+        self.cloud_engine.warm_compile()
+
+    # -- durability -----------------------------------------------------------
+    def note_hang(self) -> None:
+        """Watchdog escalation across the cascade. A cascade ``step``
+        interleaves the gate and both legs, and the wall-clock deadline
+        cannot tell which leg stalled — roll both back (token-exact, so
+        correctness never depends on pinpointing the stall)."""
+        self.hang_recoveries += 1
+        for eng in (self.edge_engine, self.cloud_engine):
+            if eng._slots:
+                eng.note_hang()
+
+    def _live_cascade_requests(self) -> List[CascadeRequest]:
+        return (list(self._requests) + list(self._edge_map.values())
+                + list(self._cloud_map.values()))
+
+    def known_request_ids(self) -> set:
+        ids = {r.request_id for r in self._live_cascade_requests()}
+        ids.update(self._done.keys())
+        return ids
+
+    def snapshot(self) -> Dict[str, object]:
+        """Serialize the whole cascade: both legs' engine snapshots (so
+        routed requests resume token-exact on their original leg) plus
+        the cascade's own request table, routing maps, breaker state and
+        running metrics. Same contract as ``ServingEngine.snapshot`` —
+        non-destructive, nested string-keyed dicts, ``save_snapshot``-
+        ready."""
+        from repro.checkpoint.io import json_leaf
+        now = time.perf_counter()
+        requests: Dict[str, Dict[str, object]] = {}
+
+        def record(r: CascadeRequest, phase: str, leg: Optional[str],
+                   inner_rid: Optional[int]) -> None:
+            max_new, temp = r._gen
+            rec: Dict[str, object] = {"meta": json_leaf({
+                "rid": r.request_id, "phase": phase, "leg": leg,
+                "inner_rid": inner_rid, "route": r.route,
+                "conf": r.conf, "priority": r.priority,
+                "deadline_s": r.deadline_s,
+                "age_s": now - r.submit_s if r.submit_s else 0.0,
+                "ttft_s": r.ttft_s, "status": r.status,
+                "failure_reason": r.failure_reason,
+                "latency_s": r.latency_s,
+                "max_new_tokens": max_new, "temperature": temp}),
+                "prompt": np.asarray(r.prompt, np.int32)}
+            if phase == "terminal" and r.output is not None \
+                    and len(r.output):
+                rec["output"] = np.asarray(r.output, np.int32)
+            requests[f"r{r.request_id:08d}"] = rec
+
+        for r in self._requests:
+            record(r, "pending", None, None)
+        for leg, mapping in (("edge", self._edge_map),
+                             ("cloud", self._cloud_map)):
+            for inner_rid, r in mapping.items():
+                record(r, "routed", leg, inner_rid)
+        for r in self._done.values():
+            record(r, "terminal", None, None)
+
+        meta = {"kind": type(self).__name__, "next_id": self._next_id,
+                "degradation_s": self._degradation_s,
+                "breaker": {"state": self.breaker.state,
+                            "consecutive_failures":
+                                self.breaker.consecutive_failures,
+                            "trips": self.breaker.trips,
+                            "denied": self.breaker._denied},
+                "metrics": dataclasses.asdict(self.metrics)}
+        return {"engine": json_leaf(meta), "requests": requests,
+                "edge": self.edge_engine.snapshot(),
+                "cloud": self.cloud_engine.snapshot()}
+
+    def restore(self, snap: Dict[str, object]) -> Dict[str, int]:
+        """Load a cascade ``snapshot`` into this (cold) engine: the legs
+        restore their own requests first (checkpoints intact), then the
+        cascade table re-links routed requests to them by inner id.
+        Breaker state, degradation EWMA and routing metrics carry over —
+        a breaker that was open stays open across the restart."""
+        from repro.checkpoint.io import json_unleaf
+        if (self._requests or self._edge_map or self._cloud_map
+                or self._done):
+            raise RuntimeError("restore() needs a cold cascade engine")
+        inner = {"edge": self.edge_engine.restore(snap["edge"]),
+                 "cloud": self.cloud_engine.restore(snap["cloud"])}
+        eng = json_unleaf(snap["engine"])
+        now = time.perf_counter()
+        live = terminal = 0
+        for key in sorted(snap.get("requests", {})):
+            rec = snap["requests"][key]
+            meta = json_unleaf(rec["meta"])
+            r = CascadeRequest(int(meta["rid"]),
+                               np.asarray(rec["prompt"], np.int32),
+                               route=meta["route"] or "",
+                               conf=float(meta["conf"]),
+                               priority=int(meta["priority"]),
+                               deadline_s=meta["deadline_s"])
+            r.submit_s = now - float(meta["age_s"])
+            r.enqueue_s = now
+            r.ttft_s = float(meta["ttft_s"])
+            r._gen = (int(meta["max_new_tokens"]),
+                      float(meta["temperature"]))
+            if meta["phase"] == "terminal":
+                r.status = meta["status"]
+                r.failure_reason = meta["failure_reason"]
+                r.latency_s = float(meta["latency_s"])
+                r.finish_s = now
+                out = rec.get("output")
+                r.output = (np.asarray(out, np.int32) if out is not None
+                            else np.zeros((0,), np.int32))
+                self._done[r.request_id] = r
+                terminal += 1
+                continue
+            if meta["phase"] == "routed":
+                mapping = (self._edge_map if meta["leg"] == "edge"
+                           else self._cloud_map)
+                mapping[int(meta["inner_rid"])] = r
+            else:
+                self._requests.append(r)
+            live += 1
+        self._next_id = max(self._next_id, int(eng["next_id"]))
+        self._degradation_s = float(eng["degradation_s"])
+        bk = eng["breaker"]
+        self.breaker.state = bk["state"]
+        self.breaker.consecutive_failures = bk["consecutive_failures"]
+        self.breaker.trips = bk["trips"]
+        self.breaker._denied = bk["denied"]
+        self.metrics = CascadeMetrics(**eng["metrics"])
+        self.restores += 1
+        return {"live": live, "terminal": terminal, "inner": inner}
+
+    def requeue_lost(self, request_id: int, prompt: np.ndarray,
+                     max_new_tokens: int = 16, temperature: float = 0.0,
+                     priority: int = 0,
+                     deadline_s: Optional[float] = None) -> CascadeRequest:
+        """Journal replay (same contract as the flat engine): re-queue a
+        crash-lost submission under its original id, back at the gate —
+        it re-routes from scratch."""
+        from repro.serving.engine import validate_prompt
+        prompt = validate_prompt(prompt, max_new_tokens, self.max_seq_len,
+                                 self.truncate_prompts)
+        r = CascadeRequest(int(request_id), prompt, priority=priority,
+                           deadline_s=deadline_s)
+        r.submit_s = time.perf_counter()
+        r.enqueue_s = r.submit_s
+        r._gen = (max_new_tokens, temperature)
+        self._next_id = max(self._next_id, int(request_id) + 1)
+        self._requests.append(r)
+        return r

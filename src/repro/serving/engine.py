@@ -117,14 +117,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.io import (json_leaf, json_unleaf,
+                                 load_checkpoint_tree, save_checkpoint)
 from repro.models.model import LM
 from repro.serving.faults import FaultError, FaultPlan
-from repro.serving.kv_cache import RingCache, RingLayout, make_backend
+from repro.serving.kv_cache import (RingCache, RingLayout, make_backend,
+                                    resolve_swap_caches)
 from repro.serving.sampler import (accepted_prefix_length, request_keys,
                                    sample_logits_batch, sample_logits_keyed)
 from repro.serving.scheduler import (MONOLITHIC, PrefillProgress, Scheduler,
                                      bucket_for, prompt_buckets,
                                      request_rank)
+from repro.utils.tree import flat_paths
 
 
 @dataclasses.dataclass
@@ -296,6 +300,13 @@ class ServingEngine:
         self.fault_recoveries = 0     # decode rounds rolled back
         self.retries_total = 0        # per-request retries, summed
         self.recovery_latencies: List[float] = []  # fault -> re-grant, s
+        # durability: restore()s applied to this engine and watchdog-
+        # escalated hang recoveries (note_hang); deferred swap-out D2H
+        # transfers are parked here and materialized after the *next*
+        # scheduler plan, so the copy overlaps host planning work
+        self.restores = 0
+        self.hang_recoveries = 0
+        self._pending_swaps: List[object] = []
         self._status_counts = collections.Counter()  # terminal dispositions
         # per-step token tap (the gateway's streaming feed): when set, every
         # decode round's host sync is followed by a call with the round's
@@ -615,6 +626,13 @@ class ServingEngine:
             try_preempt=lambda: self._try_preempt(slots))
         for c in plan.chunks:
             self._run_chunk(c, prefilling, slots)
+        if self._pending_swaps:
+            # rollback-path swap-outs started their D2H copies
+            # asynchronously; the planning/chunk work above overlapped
+            # them — materialize before anything can consume a checkpoint
+            for h in self._pending_swaps:
+                h.resolve()
+            self._pending_swaps.clear()
         # occupancy peak counts prefill-only steps too: a step where every
         # live request is still prefilling used to be invisible here
         if slots or prefilling:
@@ -1136,8 +1154,13 @@ class ServingEngine:
             r.last_fault = "swap_out"    # checkpoint transport failed:
             swap = False                 # recompute resume instead (exact)
         if swap:
+            # deferred D2H: the gather lands in a fresh device buffer, the
+            # host copy streams in the background and is resolved after
+            # the next scheduler plan (see step()) — the rollback path no
+            # longer stalls the step loop on the transfer
             r.resume.kv, self._cache_state = self.backend.swap_out(
-                self._cache_state, slot)
+                self._cache_state, slot, defer=True)
+            self._pending_swaps.append(r.resume.kv["caches"])
         else:
             self._cache_state = self.backend.free_slot(self._cache_state,
                                                        slot)
@@ -1308,6 +1331,8 @@ class ServingEngine:
             "occupancy": self.occupancy(),
             "deadline_hits": self.scheduler.deadline_hit_rates(),
             "speculative": self.speculative_metrics(),
+            "restores": self.restores,
+            "hang_recoveries": self.hang_recoveries,
         }
 
     def speculative_metrics(self) -> Dict[str, object]:
@@ -1406,6 +1431,12 @@ class ServingEngine:
             return
         self._reserve_lookahead(slots, k)
         if self._faults is not None:
+            if self._faults.fire("hang"):
+                # a hung dispatch: stall without raising — no exception
+                # path ever sees this, only the gateway's wall-clock
+                # watchdog around the step (which then escalates through
+                # note_hang -> the ordinary rollback/retry ladder)
+                time.sleep(self._faults.hang_s)
             # a poisoned dispatch fails at launch, before the donated
             # buffers are touched — device state is intact, which is what
             # lets _recover_decode_fault checkpoint from it (the look-ahead
@@ -1583,6 +1614,257 @@ class ServingEngine:
         if self.speculative:
             total += self._draft_backend.hbm_bytes()
         return total
+
+    # -- durability -----------------------------------------------------------
+    def note_hang(self) -> None:
+        """Watchdog escalation: a dispatch exceeded its wall-clock deadline
+        and the grace wait also expired-or-recovered-late. The stall raised
+        nothing, so no exception path ran — synthesize the same recovery
+        the raising seams get: roll every active slot back to its host
+        checkpoint and requeue through the retry/backoff ladder. If the
+        stalled dispatch did eventually land, the rollback discards real
+        work, but the checkpoint (tokens + ``last`` logits + step counter)
+        makes the resumed stream token-exact either way — wasted compute,
+        never wrong tokens."""
+        self.hang_recoveries += 1
+        self._recover_decode_fault("hang")
+
+    def _live_requests(self) -> List[Request]:
+        """Every non-terminal request the engine owns, de-duplicated:
+        queued (preempted/resuming included), mid-prefill, mid-decode."""
+        live = list(self._queue)
+        live.extend(pp.request for pp in self._prefilling.values())
+        live.extend(self._slots.values())
+        return live
+
+    def known_request_ids(self) -> set:
+        """Request ids this engine can account for — live or terminal.
+        The gateway's journal replay consults this to decide which logged
+        submissions were lost in a crash and must be re-queued."""
+        ids = {r.request_id for r in self._live_requests()}
+        ids.update(self._done.keys())
+        return ids
+
+    def snapshot(self) -> Dict[str, object]:
+        """Serialize every request the engine owns — live and terminal —
+        into a nested string-keyed dict fit for ``save_snapshot`` (flat
+        key-path .npz via ``checkpoint.io``). Non-destructive: device
+        state, slots and the block pool are untouched; live decode slots
+        are checkpointed exactly the way preemption checkpoints them
+        (generated tokens, step counter, ``last`` logits, and — on a
+        paged backend — the slot's K/V blocks via ``checkpoint_slot``),
+        so ``restore`` on a cold engine resumes token-for-token.
+
+        Wall-clock stamps cross a process boundary, so ages are stored
+        relative (``age_s = now - submit_s``) and re-anchored at restore.
+        Stream-emission watermarks (``_emitted``) are deliberately *not*
+        captured: after a crash-restart the gateway replays each stream
+        from token zero."""
+        now = time.perf_counter()
+        requests: Dict[str, Dict[str, object]] = {}
+
+        def base_meta(r: Request, phase: str, steps: int) -> dict:
+            return {"rid": r.request_id, "phase": phase, "steps": steps,
+                    "max_new_tokens": r.max_new_tokens,
+                    "temperature": r.temperature, "priority": r.priority,
+                    "deadline_s": r.deadline_s,
+                    "age_s": now - r.submit_s if r.submit_s else 0.0,
+                    "ttft_s": r.ttft_s, "preemptions": r.preemptions,
+                    "status": r.status, "failure_reason": r.failure_reason,
+                    "retries": r.retries, "last_fault": r.last_fault,
+                    "downgraded": r.downgraded, "latency_s": r.latency_s}
+
+        def record(r: Request, phase: str, steps: int,
+                   tokens: Optional[np.ndarray],
+                   last: Optional[np.ndarray], kv) -> None:
+            rec: Dict[str, object] = {
+                "meta": json_leaf(base_meta(r, phase, steps)),
+                "prompt": np.asarray(r.prompt, np.int32)}
+            if tokens is not None and len(tokens):
+                rec["tokens"] = np.asarray(tokens, np.int32)
+            if last is not None:
+                rec["last"] = np.asarray(last, np.float32)
+            if kv is not None:
+                rec["kv"] = {"n_blocks": np.int32(kv["n_blocks"]),
+                             "caches": resolve_swap_caches(kv)}
+            requests[f"r{r.request_id:08d}"] = rec
+
+        # live decode slots: host-pull the decode checkpoint wholesale
+        if self._slots:
+            steps_h = np.asarray(self._state["steps"])
+            out_h = np.asarray(self._state["out"])
+            last_h = np.asarray(self._state["last"])
+            can_kv = self._preempt_swap and hasattr(self.backend,
+                                                    "checkpoint_slot")
+            for slot, r in self._slots.items():
+                steps = int(steps_h[slot])
+                kv = (self.backend.checkpoint_slot(self._cache_state, slot)
+                      if can_kv else None)
+                record(r, "live", steps, np.array(out_h[slot, :steps]),
+                       np.array(last_h[slot]), kv)
+        # mid-prefill and queued: the installed chunks are abandoned (the
+        # restored engine re-prefills), but a carried resume checkpoint —
+        # preempted or fault-requeued work — is preserved verbatim
+        for r in list(self._queue) + [pp.request
+                                      for pp in self._prefilling.values()]:
+            rs = r.resume
+            if rs is not None:
+                record(r, "live", rs.steps, rs.tokens, rs.last, rs.kv)
+            else:
+                record(r, "live", 0, None, None, None)
+        for r in self._done.values():
+            rec: Dict[str, object] = {
+                "meta": json_leaf(base_meta(r, "terminal", 0)),
+                "prompt": np.asarray(r.prompt, np.int32)}
+            if r.output is not None and len(r.output):
+                rec["output"] = np.asarray(r.output, np.int32)
+            requests[f"r{r.request_id:08d}"] = rec
+
+        engine_meta = {"kind": type(self).__name__,
+                       "backend": type(self.backend).__name__,
+                       "next_id": self._next_id,
+                       "step_count": self._step_count,
+                       "status_counts": dict(self._status_counts),
+                       "batch_slots": self.batch_slots,
+                       "max_seq_len": self.max_seq_len,
+                       "vocab": self.lm.cfg.padded_vocab}
+        return {"engine": json_leaf(engine_meta), "requests": requests}
+
+    def restore(self, snap: Dict[str, object]) -> Dict[str, int]:
+        """Load a ``snapshot`` into this (cold) engine. Live requests
+        re-enter the queue carrying their decode checkpoint as a
+        ``_ResumeState`` — admission then resumes them through the exact
+        swap/recompute machinery preemption uses, so survivors continue
+        token-for-token (the same construction ``seed`` is required:
+        sampling keys fold the base key with ``(rid, steps)``). A K/V
+        checkpoint is kept only when this engine's backend can swap it
+        back in; otherwise it is dropped and the recompute path rebuilds
+        the cache from the host token stream — still exact. Terminal
+        requests land straight in the done map so results survive the
+        restart. Scheduler estimates are reset: pre-crash service-rate
+        and deadline-hit history describes a process that no longer
+        exists."""
+        if self._slots or self._prefilling or self._queue or self._done:
+            raise RuntimeError("restore() needs a cold engine: this one "
+                               "already owns requests")
+        eng = json_unleaf(snap["engine"])
+        if eng.get("vocab") != self.lm.cfg.padded_vocab:
+            raise ValueError(
+                f"snapshot vocab {eng.get('vocab')} != engine vocab "
+                f"{self.lm.cfg.padded_vocab}: the saved logits checkpoints "
+                f"cannot be restored into this model")
+        if eng.get("max_seq_len") != self.max_seq_len:
+            raise ValueError(
+                f"snapshot max_seq_len {eng.get('max_seq_len')} != engine "
+                f"max_seq_len {self.max_seq_len}")
+        now = time.perf_counter()
+        can_kv = hasattr(self.backend, "swap_in")
+        kv_template = (self._cache_state.get("caches")
+                       if can_kv and isinstance(self._cache_state, dict)
+                       else None)
+        live = terminal = 0
+        for key in sorted(snap["requests"]):
+            rec = snap["requests"][key]
+            meta = json_unleaf(rec["meta"])
+            r = Request(int(meta["rid"]),
+                        np.asarray(rec["prompt"], np.int32),
+                        int(meta["max_new_tokens"]),
+                        float(meta["temperature"]),
+                        priority=int(meta["priority"]),
+                        deadline_s=meta["deadline_s"])
+            r.submit_s = now - float(meta["age_s"])
+            r.ttft_s = float(meta["ttft_s"])
+            r.preemptions = int(meta["preemptions"])
+            r.retries = int(meta["retries"])
+            r.last_fault = meta["last_fault"]
+            r.downgraded = bool(meta["downgraded"])
+            if meta["phase"] == "terminal":
+                r.status = meta["status"]
+                r.failure_reason = meta["failure_reason"]
+                r.latency_s = float(meta["latency_s"])
+                r.finish_s = now
+                out = rec.get("output")
+                r.output = (np.asarray(out, np.int32) if out is not None
+                            else np.zeros((0,), np.int32))
+                self._done[r.request_id] = r
+                terminal += 1
+                continue
+            steps = int(meta["steps"])
+            if steps > 0:
+                kv = None
+                if can_kv and "kv" in rec and kv_template is not None:
+                    kv = {"n_blocks": int(np.asarray(
+                              rec["kv"]["n_blocks"])),
+                          "caches": _rebuild_like(kv_template,
+                                                  rec["kv"]["caches"])}
+                tokens = rec.get("tokens")
+                r.resume = _ResumeState(
+                    steps=steps,
+                    tokens=(np.asarray(tokens, np.int32)
+                            if tokens is not None
+                            else np.zeros((0,), np.int32)),
+                    last=np.asarray(rec["last"], np.float32),
+                    kv=kv)
+            r.enqueue_s = now
+            self._queue.append(r)
+            live += 1
+        self._queue.sort(key=request_rank)
+        self._next_id = max(self._next_id, int(eng["next_id"]))
+        self._step_count = max(self._step_count, int(eng["step_count"]))
+        self._status_counts.update(eng["status_counts"])
+        self.scheduler.reset_estimates()
+        self.restores += 1
+        return {"live": live, "terminal": terminal}
+
+    def requeue_lost(self, request_id: int, prompt: np.ndarray,
+                     max_new_tokens: int = 16, temperature: float = 0.0,
+                     priority: int = 0,
+                     deadline_s: Optional[float] = None) -> Request:
+        """Journal replay: re-queue a submission the crash lost (it was
+        acknowledged but appears in no snapshot), under its *original*
+        request id so the client's handle and the journal's terminal
+        record still line up. Generation starts over from the prompt —
+        nothing survived to resume from."""
+        prompt = validate_prompt(prompt, max_new_tokens, self.max_seq_len,
+                                 self.truncate_prompts)
+        r = Request(int(request_id), prompt, max_new_tokens, temperature,
+                    priority=priority, deadline_s=deadline_s)
+        r.submit_s = time.perf_counter()
+        r.enqueue_s = r.submit_s
+        self._next_id = max(self._next_id, int(request_id) + 1)
+        self._queue.append(r)
+        return r
+
+
+def _rebuild_like(template, loaded):
+    """Rebuild ``loaded`` (nested string-keyed dicts from
+    ``load_checkpoint_tree``) into the pytree *structure* of ``template``.
+    ``flat_paths`` spells a list index and a same-named dict key
+    identically ("caches/0/..."), so matching the flat paths and
+    unflattening against the template's treedef recovers the original
+    container types — which the jitted swap-in scatter was traced
+    against."""
+    tpl = flat_paths(template)
+    got = flat_paths(loaded)
+    missing = set(tpl) - set(got)
+    if missing:
+        raise ValueError(f"snapshot K/V missing paths: "
+                         f"{sorted(missing)[:5]}")
+    return jax.tree.unflatten(jax.tree.structure(template),
+                              [got[k] for k in tpl])
+
+
+def save_snapshot(directory: str, snapshot: Dict[str, object],
+                  step: int = 0, keep: int = 3) -> str:
+    """Persist an engine snapshot through the checkpoint envelope (atomic
+    rename, bounded retention)."""
+    return save_checkpoint(directory, step, snapshot, keep=keep)
+
+
+def load_snapshot(directory: str, step: Optional[int] = None):
+    """Load a persisted engine snapshot (template-free): returns
+    ``(snapshot_tree, step)``."""
+    return load_checkpoint_tree(directory, step)
 
 
 class DrainBatchEngine:

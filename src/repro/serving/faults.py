@@ -25,6 +25,11 @@ seam                  trips
 ``swap_out``          ``PagedCache.swap_out`` during preemption/rollback
 ``swap_in``           ``PagedCache.swap_in`` during a swap-path resume
 ``pool``              transient block-pool exhaustion at admission
+``hang``              a *non-raising* stall at the decode dispatch: the
+                      consulting site sleeps ``hang_s`` seconds instead
+                      of raising, so no exception-based recovery path
+                      ever sees it — only the gateway's wall-clock
+                      watchdog can (see ``ServingGateway``)
 ``cancel``            cancellation of a random in-flight request
 ``edge``              edge-engine outage at the cascade gate
 ``wan_spike``         a latency spike on a ``core.network.Link`` transfer
@@ -111,8 +116,13 @@ class FaultPlan:
     assertions meaningful.
     """
 
-    def __init__(self, seed: int = 0, **seams: SpecLike):
+    def __init__(self, seed: int = 0, hang_s: float = 0.25,
+                 **seams: SpecLike):
         self.seed = seed
+        # stall duration for the non-raising ``hang`` seam: how long the
+        # consulting dispatch site sleeps when it fires. Long enough to
+        # trip a watchdog deadline, short enough that chaos runs finish.
+        self.hang_s = float(hang_s)
         self._specs: Dict[str, SeamSpec] = {
             name: _coerce(name, spec) for name, spec in seams.items()}
         self._rng: Dict[str, np.random.Generator] = {}

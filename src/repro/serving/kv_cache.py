@@ -435,6 +435,41 @@ class RingCache(KVCacheBackend):
         return self.hbm_bytes() / self.batch_slots
 
 
+class HostSwapHandle:
+    """Deferred device→host K/V transfer for the swap/checkpoint path.
+
+    ``swap_out(..., defer=True)`` gathers the slot's blocks into a fresh
+    device buffer (so the pool can be scribbled over immediately), starts
+    the D2H copy asynchronously, and hands the engine this handle instead
+    of blocking on ``jax.device_get`` — the transfer then overlaps the
+    next scheduler plan on the host. ``resolve()`` (idempotent) completes
+    the copy and returns the numpy pytree; every consumer of a swap
+    checkpoint's ``caches`` goes through ``resolve_swap_caches``."""
+
+    def __init__(self, dev_caches):
+        for leaf in jax.tree.leaves(dev_caches):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+        self._dev = dev_caches
+        self._host = None
+
+    def resolve(self):
+        if self._host is None:
+            self._host = jax.device_get(self._dev)
+            self._dev = None                    # drop the device buffers
+        return self._host
+
+
+def resolve_swap_caches(host_kv):
+    """Materialize a swap checkpoint's ``caches`` in place (no-op when the
+    transfer was eager or already resolved) and return the numpy pytree."""
+    caches = host_kv["caches"]
+    if isinstance(caches, HostSwapHandle):
+        caches = caches.resolve()
+        host_kv["caches"] = caches
+    return caches
+
+
 class PagedCache(KVCacheBackend):
     """Block-table backend: a global pool of ``num_blocks`` blocks of
     ``block_size`` tokens per layer, committed per request at admission and
@@ -852,7 +887,7 @@ class PagedCache(KVCacheBackend):
                             jnp.full((m,), self.num_blocks, jnp.int32))
         return {"caches": caches, "tables": cache_state["tables"]}
 
-    def swap_out(self, cache_state, slot):
+    def swap_out(self, cache_state, slot, *, defer: bool = False):
         """Checkpoint ``slot``'s drawn blocks to the host and release them:
         gathers every layer's K/V (and per-token positions) for the slot's
         block list into numpy arrays, then returns the blocks through the
@@ -862,19 +897,43 @@ class PagedCache(KVCacheBackend):
         them, and the resumed slot gets private replicas at ``swap_in``.
         Returns ``(host_kv, new_cache_state)``; ``host_kv`` is the cache
         pytree restricted to the slot's (padded) block row plus the live
-        block count, opaque to the engine."""
+        block count, opaque to the engine.
+
+        With ``defer=True`` the D2H copy is started asynchronously and
+        ``host_kv["caches"]`` is a ``HostSwapHandle`` the caller resolves
+        later (the gather lands in a fresh device buffer either way, so
+        the released blocks may be reused immediately) — the fault-
+        recovery rollback uses this to overlap the transfer with the next
+        scheduler plan instead of stalling the step loop on it."""
         blocks = self._slot_blocks.get(slot)
         if blocks is None:
             raise RuntimeError(f"slot {slot} holds no blocks to swap out")
         gather_fn, _ = self._swap_fns()
         idx = np.zeros((self.blocks_per_slot,), np.int32)   # pad: trash
         idx[:len(blocks)] = blocks
+        gathered = gather_fn(cache_state["caches"], jnp.asarray(idx))
         host = {"n_blocks": len(blocks),
-                "caches": jax.device_get(
-                    gather_fn(cache_state["caches"], jnp.asarray(idx)))}
+                "caches": (HostSwapHandle(gathered) if defer
+                           else jax.device_get(gathered))}
         self.swap_outs += 1
         self.preempt_swap_bytes += len(blocks) * self.block_bytes()
         return host, self.free_slot(cache_state, slot)
+
+    def checkpoint_slot(self, cache_state, slot):
+        """Non-destructive host checkpoint of a live slot's drawn blocks —
+        ``swap_out``'s wire format without the release (refcounts, ledger
+        and table row untouched), so an engine snapshot can persist every
+        active slot's K/V while the engine keeps serving. Restores through
+        the ordinary ``swap_in`` path on a cold engine."""
+        blocks = self._slot_blocks.get(slot)
+        if blocks is None:
+            raise RuntimeError(f"slot {slot} holds no blocks to checkpoint")
+        gather_fn, _ = self._swap_fns()
+        idx = np.zeros((self.blocks_per_slot,), np.int32)   # pad: trash
+        idx[:len(blocks)] = blocks
+        return {"n_blocks": len(blocks),
+                "caches": jax.device_get(
+                    gather_fn(cache_state["caches"], jnp.asarray(idx)))}
 
     def available_blocks(self) -> int:
         """Free blocks not spoken for by outstanding commitments (the
@@ -930,7 +989,8 @@ class PagedCache(KVCacheBackend):
         _, scatter_fn = self._swap_fns()
         phys = np.full((self.blocks_per_slot,), self.num_blocks, np.int32)
         phys[:n_now] = fresh                    # pad: OOB, writes dropped
-        caches = scatter_fn(cache_state["caches"], host_kv["caches"],
+        caches = scatter_fn(cache_state["caches"],
+                            resolve_swap_caches(host_kv),
                             jnp.asarray(phys))
         # whole-array host round-trip: a sliced eager update would compile
         # per slot index (see ServingEngine._edit_state)

@@ -183,6 +183,9 @@ class Scheduler:
                  max_decode_steps: int = 1,
                  admission_policy: Optional[str] = None,
                  service_ewma_alpha: float = 0.25,
+                 deadline_margin_target: float = 0.95,
+                 deadline_margin_min_obs: int = 4,
+                 deadline_margin_cap: float = 4.0,
                  speculative_tokens: int = 0,
                  spec_min_commit: float = 1.25,
                  spec_probe_every: int = 32):
@@ -196,6 +199,12 @@ class Scheduler:
         self._ewma_alpha = service_ewma_alpha
         self._service_s: dict = {}      # priority class -> EWMA service s
         self._deadline_obs: dict = {}   # priority class -> [hits, total]
+        # measured-outcome feedback on feasibility (see
+        # ``deadline_safety_margin``): below-target observed hit rates
+        # inflate the admission estimate, bounded by the cap
+        self.deadline_margin_target = deadline_margin_target
+        self.deadline_margin_min_obs = deadline_margin_min_obs
+        self.deadline_margin_cap = deadline_margin_cap
         if max_decode_steps < 1:
             raise ValueError(
                 f"max_decode_steps must be >= 1 (got {max_decode_steps})")
@@ -299,19 +308,57 @@ class Scheduler:
             for p, (h, t) in sorted(self._deadline_obs.items())
         }
 
+    def absorb_deadline_hits(self, table: Optional[dict]) -> None:
+        """Seed the per-class deadline observations from an externally
+        measured table — ``MonitoringService.deadline_hit_rates``'s
+        ``{priority: {"hits", "total", ...}}`` shape — closing the loop
+        between monitored outcomes and the admission estimator (and, on a
+        restart, letting a recovered engine inherit the previous
+        incarnation's evidence instead of cold-starting the margin).
+        Absorbed counts *replace* the class's local tally: the monitoring
+        table is the superset view."""
+        if not table:
+            return
+        for p, row in table.items():
+            self._deadline_obs[int(p)] = (int(row["hits"]),
+                                          int(row["total"]))
+
+    def deadline_safety_margin(self, priority: int) -> float:
+        """Multiplier on the feasibility estimate from *measured* deadline
+        outcomes: 1.0 while the class's observed hit rate meets
+        ``deadline_margin_target`` (or while fewer than
+        ``deadline_margin_min_obs`` outcomes exist — too little evidence
+        to second-guess the EWMA), otherwise ``target / rate`` capped at
+        ``deadline_margin_cap``. A class that keeps missing in practice —
+        preemption churn, fault retries, estimator bias — thus needs
+        proportionally more headroom before "feasible", so admission
+        tracks observed per-class outcomes, not just the service-time
+        EWMA. Cleared with ``reset_estimates`` (restarts included)."""
+        hits, total = self._deadline_obs.get(priority, (0, 0))
+        if total < self.deadline_margin_min_obs:
+            return 1.0
+        rate = hits / total
+        if rate >= self.deadline_margin_target:
+            return 1.0
+        floor = self.deadline_margin_target / self.deadline_margin_cap
+        return self.deadline_margin_target / max(rate, floor)
+
     def deadline_feasible(self, *, deadline_s: float, ahead: int,
                           priority: int) -> bool:
         """Whether a submit with ``deadline_s`` can plausibly meet it:
         ``ahead`` requests (active + queued at better-or-equal rank) must
         drain through ``batch_slots`` concurrent slots at the measured
-        class service rate before this one finishes. Deliberately
-        first-order — the point is refusing submits that are *hopeless*
-        at the observed rate, not shaving the marginal ones."""
+        class service rate before this one finishes, with the estimate
+        inflated by the class's measured-outcome safety margin
+        (``deadline_safety_margin``). Deliberately first-order — the
+        point is refusing submits that are *hopeless* at the observed
+        rate, not shaving the marginal ones."""
         s = self.service_estimate(priority)
         if s is None:
             return True
         wait = ahead * s / self.batch_slots
-        return wait + s <= deadline_s
+        return (wait + s) * self.deadline_safety_margin(priority) \
+            <= deadline_s
 
     # -- speculative draft-depth policy ---------------------------------------
     def observe_speculation(self, slot_rounds: int, drafted: int,

@@ -1,0 +1,536 @@
+"""Durable serving (ISSUE 9): snapshot/restore, journal replay, watchdog.
+
+The contract under test: a serving process may die at *any* step — or
+hang mid-dispatch — and the recovered incarnation must finish every
+acknowledged, non-cancelled request with survivors token-for-token
+identical to the crash-free run. Three mechanisms compose to deliver
+that: ``ServingEngine.snapshot``/``restore`` (token-exact resumption of
+live requests into a cold same-seed engine), the gateway's write-ahead
+``RequestJournal`` (acknowledged submits the snapshot missed are
+replayed under their original ids; duplicates refused), and the
+dispatch watchdog (a late step rolls back in-process via ``note_hang``;
+a wedged step escalates to ``EngineWedgedError`` and a supervised
+restart from snapshot + journal).
+"""
+import asyncio
+import os
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, dense_stages
+from repro.models.model import LM
+from repro.serving import (EngineWedgedError, FaultPlan, RequestJournal,
+                           ServingEngine, ServingGateway, load_snapshot,
+                           recover_engine, save_snapshot)
+
+
+def _tiny_cfg(layers=2, name="tiny"):
+    return ModelConfig(
+        name=name, family="dense", source="t", num_layers=layers,
+        d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        vocab_size=64, stages=dense_stages(layers), param_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    lm = LM(_tiny_cfg(), kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    return lm, params
+
+
+@pytest.fixture(scope="module")
+def draft():
+    lm = LM(_tiny_cfg(layers=1, name="drf"), kv_chunk=8)
+    params, _ = lm.init(jax.random.PRNGKey(7))
+    return lm, params
+
+
+def _trace(n=6, seed=1, budgets=(3, 12)):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 60, size=int(rng.integers(3, 12))),
+             int(rng.integers(*budgets))) for _ in range(n)]
+
+
+# the backend × decode-shape matrix the crash sweep covers (mirrors the
+# chaos matrix in test_faults.py): recompute resume on the ring, swap
+# resume on the paged pool, the multi-step scan, and chunked prefill
+CONFIGS = {
+    "ring": dict(cache_backend="ring"),
+    "paged": dict(cache_backend="paged", block_size=8, num_pool_blocks=28),
+    "paged_multistep": dict(cache_backend="paged", block_size=8,
+                            num_pool_blocks=28, max_decode_steps=4),
+    "paged_chunked": dict(cache_backend="paged", block_size=8,
+                          num_pool_blocks=28, chunk_tokens=8),
+}
+
+BASE_KW = dict(batch_slots=3, max_seq_len=64, min_bucket=4)
+
+
+def _engine(tiny, **kw):
+    lm, params = tiny
+    base = dict(BASE_KW)
+    base.update(kw)
+    return ServingEngine(lm, params, **base)
+
+
+def _baseline(tiny, trace, temperature, **kw):
+    eng = _engine(tiny, **kw)
+    for prompt, budget in trace:
+        eng.submit(prompt, budget, temperature=temperature)
+    return eng.run()
+
+
+def _drain(eng, max_steps=2000):
+    steps = 0
+    while eng.pending:
+        eng.step()
+        steps += 1
+        assert steps <= max_steps, "engine livelocked after restore"
+        if hasattr(eng.backend, "assert_invariants"):
+            eng.backend.assert_invariants()
+    return eng._done
+
+
+def _assert_drained_clean(eng):
+    assert sorted(eng._free) == list(range(eng.batch_slots))
+    be = eng.backend
+    if hasattr(be, "assert_invariants"):
+        be.assert_invariants()
+        assert be._gap_total == 0 and be._ref == {}
+
+
+def _crash_then_restore(tiny, trace, crash_step, temperature,
+                        fault_plan=None, snapshot_dir=None, **kw):
+    """Step engine #1 to ``crash_step``, snapshot, abandon it (the
+    "crash"), restore into a cold same-construction engine #2 and drain.
+    Returns (engine2, merged terminal map)."""
+    eng1 = _engine(tiny, fault_plan=fault_plan, **kw)
+    for prompt, budget in trace:
+        eng1.submit(prompt, budget, temperature=temperature)
+    for _ in range(crash_step):
+        if not eng1.pending:
+            break
+        eng1.step()
+    snap = eng1.snapshot()
+    if snapshot_dir is not None:             # through the .npz envelope
+        save_snapshot(snapshot_dir, snap, step=crash_step)
+        snap, _ = load_snapshot(snapshot_dir)
+    eng2 = _engine(tiny, **kw)
+    info = eng2.restore(snap)
+    assert info["live"] + info["terminal"] == len(trace)
+    if hasattr(eng2.backend, "assert_invariants"):
+        eng2.backend.assert_invariants()
+    return eng2, _drain(eng2)
+
+
+# ---------------------------------------------------------------------------
+# Engine snapshot/restore: token-exact resumption
+# ---------------------------------------------------------------------------
+
+def test_restore_mid_flight_is_token_exact(tiny, tmp_path):
+    """Crash at a randomized step, restore through the on-disk envelope:
+    every request — already-terminal, mid-decode, mid-queue — finishes
+    with the crash-free run's exact tokens."""
+    trace = _trace(6, seed=1)
+    base = _baseline(tiny, trace, 0.7, **CONFIGS["paged"])
+    rng = np.random.default_rng(42)
+    for crash_step in rng.integers(1, 14, size=3):
+        eng2, done = _crash_then_restore(
+            tiny, trace, int(crash_step), 0.7,
+            snapshot_dir=str(tmp_path / f"s{crash_step}"),
+            **CONFIGS["paged"])
+        assert eng2.restores == 1
+        assert len(done) == len(trace)
+        for rid, r in done.items():
+            assert r.status == "done"
+            np.testing.assert_array_equal(r.output, base[rid].output)
+        _assert_drained_clean(eng2)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+@pytest.mark.parametrize("temperature", [0.0, 0.7],
+                         ids=["greedy", "sampled"])
+def test_restore_matrix_under_chaos(tiny, name, temperature):
+    """The full matrix, with a chaos schedule running *across* the crash:
+    faults before the snapshot leave retry state behind, faults after it
+    hit restored requests — survivors stay exact either way."""
+    kw = CONFIGS[name]
+    trace = _trace(7, seed=2)
+    base = _baseline(tiny, trace, temperature, **kw)
+    rng = np.random.default_rng(7)
+    for crash_step in rng.integers(2, 18, size=2):
+        plan = FaultPlan(seed=13, step={"prob": 0.1, "max_fires": 2},
+                         swap_in={"prob": 0.3, "max_fires": 2})
+        eng2, done = _crash_then_restore(tiny, trace, int(crash_step),
+                                         temperature, fault_plan=plan,
+                                         max_retries=6, **kw)
+        assert len(done) == len(trace)
+        survivors = {rid: r for rid, r in done.items()
+                     if r.status == "done"}
+        assert survivors
+        for rid, r in survivors.items():
+            np.testing.assert_array_equal(r.output, base[rid].output)
+        _assert_drained_clean(eng2)
+
+
+@pytest.mark.slow
+def test_restore_speculative_is_token_exact(tiny, draft):
+    """Crash mid-speculation: acceptance is key-coupled, so a restored
+    engine — even one whose draft controller state restarted cold —
+    recommits the exact baseline stream."""
+    lm, params = tiny
+    dlm, dparams = draft
+    kw = dict(BASE_KW, cache_backend="paged", block_size=8,
+              num_pool_blocks=28, draft_model=dlm, draft_params=dparams,
+              speculative_tokens=4)
+    trace = _trace(5, seed=3, budgets=(4, 10))
+
+    def spec_engine():
+        eng = ServingEngine(lm, params, **kw)
+        eng.scheduler.spec_min_commit = 0.0   # speculate regardless of EWMA
+        return eng
+
+    ref = spec_engine()
+    for prompt, budget in trace:
+        ref.submit(prompt, budget, temperature=0.7)
+    base = ref.run()
+
+    eng1 = spec_engine()
+    for prompt, budget in trace:
+        eng1.submit(prompt, budget, temperature=0.7)
+    for _ in range(5):
+        eng1.step()
+    eng2 = spec_engine()
+    eng2.restore(eng1.snapshot())
+    done = _drain(eng2)
+    assert len(done) == len(trace)
+    for rid, r in done.items():
+        assert r.status == "done"
+        np.testing.assert_array_equal(r.output, base[rid].output)
+    _assert_drained_clean(eng2)
+
+
+def test_restore_refuses_warm_engine(tiny):
+    eng1 = _engine(tiny)
+    eng1.submit(np.arange(5), 4)
+    snap = eng1.snapshot()
+    eng2 = _engine(tiny)
+    eng2.submit(np.arange(4), 3)
+    with pytest.raises(RuntimeError, match="cold"):
+        eng2.restore(snap)
+
+
+def test_snapshot_directory_rotation(tiny, tmp_path):
+    """save_snapshot keeps the newest ``keep`` envelopes; load_snapshot
+    picks the latest by default and an explicit step on request."""
+    eng = _engine(tiny)
+    eng.submit(np.arange(5), 4)
+    snap = eng.snapshot()
+    for step in (1, 2, 3, 4):
+        save_snapshot(str(tmp_path), snap, step=step, keep=3)
+    files = sorted(os.listdir(tmp_path))
+    assert len(files) == 3 and "step_1.npz" not in files
+    latest, step = load_snapshot(str(tmp_path))
+    assert step == 4
+    explicit, step = load_snapshot(str(tmp_path), step=2)
+    assert step == 2
+    for loaded in (latest, explicit):
+        eng2 = _engine(tiny)
+        info = eng2.restore(loaded)
+        assert info["live"] == 1
+        done = _drain(eng2)
+        assert done and all(r.status == "done" for r in done.values())
+    with pytest.raises(FileNotFoundError):
+        load_snapshot(str(tmp_path / "nope"))
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead journal: replay, duplicates, compaction, torn tail
+# ---------------------------------------------------------------------------
+
+def _submit_rec(rid, prompt, max_new=5, temperature=0.7):
+    return types.SimpleNamespace(
+        request_id=rid, prompt=np.asarray(prompt, np.int32),
+        max_new_tokens=max_new, temperature=temperature, priority=0,
+        deadline_s=None)
+
+
+def test_journal_replay_is_exact_and_refuses_duplicates(tiny, tmp_path):
+    """Replay re-queues unfinished submits under their original ids —
+    so the sampling keys, and therefore the tokens, match the crash-free
+    run exactly — and a duplicate submission of a journaled id is
+    refused, not double-served."""
+    trace = _trace(4, seed=5)
+    base = _baseline(tiny, trace, 0.7)
+
+    path = str(tmp_path / "journal.jsonl")
+    with RequestJournal(path) as j:
+        for rid, (prompt, budget) in enumerate(trace):
+            assert j.record_submit(_submit_rec(rid, prompt, budget))
+        assert not j.record_submit(_submit_rec(1, trace[1][0]))  # dup
+        assert j.duplicates_refused == 1
+        j.record_first_token(0)
+        j.record_terminal(3, "cancelled", reason="client")
+        assert sorted(j.unfinished()) == [0, 1, 2]
+
+    # "restart": a fresh journal instance over the same file drives a
+    # cold engine — rids 0..2 replayed, 3 already terminal
+    j2 = RequestJournal(path)
+    eng = _engine(tiny)
+    counts = j2.replay(eng)
+    assert counts == {"replayed": 3, "covered": 0, "duplicates": 0}
+    assert not j2.record_submit(_submit_rec(2, trace[2][0]))  # still dup
+    done = _drain(eng)
+    assert sorted(done) == [0, 1, 2]
+    for rid, r in done.items():
+        assert r.status == "done"
+        np.testing.assert_array_equal(r.output, base[rid].output)
+    j2.close()
+
+
+def test_journal_replay_skips_snapshot_covered_ids(tiny, tmp_path):
+    """Ids a restored snapshot already owns are left alone — their
+    resume checkpoints beat a from-scratch re-queue."""
+    trace = _trace(4, seed=6)
+    eng1 = _engine(tiny)
+    for prompt, budget in trace:
+        eng1.submit(prompt, budget, temperature=0.5)
+    for _ in range(3):
+        eng1.step()
+    with RequestJournal(str(tmp_path / "j.jsonl")) as j:
+        for rid, (prompt, budget) in enumerate(trace):
+            j.record_submit(_submit_rec(rid, prompt, budget))
+        j.record_submit(_submit_rec(99, np.arange(4), 3))  # snapshot missed
+        eng2 = _engine(tiny)
+        eng2.restore(eng1.snapshot())
+        counts = j.replay(eng2)
+        assert counts["covered"] == len(trace) and counts["replayed"] == 1
+    done = _drain(eng2)
+    assert sorted(done) == [0, 1, 2, 3, 99]
+    assert all(r.status == "done" for r in done.values())
+
+
+def test_journal_compaction_and_torn_tail(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with RequestJournal(path) as j:
+        for rid in range(4):
+            j.record_submit(_submit_rec(rid, np.arange(3)))
+        j.record_terminal(0, "done")
+        out = j.compact(covered_rids={0, 1})
+        assert out == {"kept": 2, "dropped": 3}
+        assert j.compactions == 1
+        assert sorted(j.unfinished()) == [2, 3]
+        assert j.stats()["appended"] == 5
+    # torn tail: a crash mid-append leaves a half-written line — the
+    # scan stops there and everything before it survives
+    with open(path, "a", encoding="utf-8") as f:
+        f.write('{"kind": "terminal", "rid": 2, "sta')
+    j2 = RequestJournal(path)
+    assert sorted(j2.unfinished()) == [2, 3]
+    assert j2.seen(2) and not j2.seen(0)     # compacted ids forgotten
+    j2.close()
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: late hang -> in-process rollback; wedge -> supervised restart
+# ---------------------------------------------------------------------------
+
+def _gw_trace(n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [dict(prompt=rng.integers(0, 60, size=int(rng.integers(3, 10))),
+                 max_new=int(rng.integers(3, 8))) for _ in range(n)]
+
+
+async def _gw_clients(gw, trace, out=None):
+    out = {} if out is None else out
+
+    async def client(item):
+        h = await gw.submit(item["prompt"], max_new_tokens=item["max_new"],
+                            temperature=0.7)
+        toks = [t async for t in h.stream()]
+        r = await h.result()
+        out[r.request_id] = (r, toks)
+
+    await asyncio.gather(*(client(it) for it in trace))
+    return out
+
+
+@pytest.mark.slow
+def test_watchdog_hang_recovers_in_process(tiny):
+    """A dispatch that completes *late* (past the deadline, inside the
+    grace window) is detected, rolled back through the retry path, and
+    service continues in the same process — streams exact."""
+    trace = _gw_trace(5, seed=8)
+    ref = _baseline(tiny, [(it["prompt"], it["max_new"]) for it in trace],
+                    0.7, **CONFIGS["paged"])
+    plan = FaultPlan(seed=0, hang=[2], hang_s=2.6)
+    eng = _engine(tiny, fault_plan=plan, **CONFIGS["paged"])
+
+    async def main():
+        # wide grace: on a loaded machine an *honest* step can also run
+        # past the deadline and complete late — that must stay a benign
+        # extra timeout+rollback, never escalate to a wedge
+        async with ServingGateway(eng, step_timeout_s=2.0,
+                                  hang_grace=3.0) as gw:
+            out = await _gw_clients(gw, trace)
+            return out, gw.stats()
+
+    out, stats = asyncio.run(main())
+    assert stats["watchdog_timeouts"] >= 1
+    assert stats["engine"]["hang_recoveries"] >= 1
+    assert stats["engine"]["retries_total"] > 0
+    assert len(out) == len(trace)
+    for rid, (r, toks) in out.items():
+        assert r.status == "done"
+        np.testing.assert_array_equal(r.output, ref[rid].output)
+        np.testing.assert_array_equal(toks, ref[rid].output)
+    _assert_drained_clean(eng)
+
+
+@pytest.mark.slow
+def test_wedge_supervised_restart_loses_nothing(tiny, tmp_path):
+    """The full crash ladder: a dispatch stalls past grace, the driver
+    raises EngineWedgedError, in-flight handles fail fast, and a fresh
+    engine recovered from snapshot + journal finishes every acknowledged
+    request — snapshot-covered survivors token-exact, journal-replayed
+    ones exact too (original ids preserved)."""
+    trace = _gw_trace(6, seed=9)
+    ref = _baseline(tiny, [(it["prompt"], it["max_new"]) for it in trace],
+                    0.7, **CONFIGS["paged"])
+    snap_dir = str(tmp_path / "snapshots")
+    journal = RequestJournal(str(tmp_path / "journal.jsonl"))
+    plan = FaultPlan(seed=0, hang=[4], hang_s=6.0)
+    eng = _engine(tiny, fault_plan=plan, **CONFIGS["paged"])
+
+    async def main():
+        # ``out`` is mutated in place: the clients all resolve (the crash
+        # fails in-flight handles fast), but the EngineWedgedError that
+        # surfaces from the gateway's exit would discard a return value
+        out = {}
+        gw = ServingGateway(eng, journal=journal, snapshot_dir=snap_dir,
+                            snapshot_every=2, step_timeout_s=1.5,
+                            hang_grace=0.5)
+        try:
+            async with gw:
+                await _gw_clients(gw, trace, out)
+            return out, gw.stats(), True
+        except EngineWedgedError:
+            return out, gw.stats(), False
+
+    out, stats, clean = asyncio.run(main())
+    assert not clean, "hang seam never wedged the engine"
+    assert len(out) == len(trace)             # every handle resolved fast
+    assert stats["watchdog_timeouts"] >= 1
+    assert stats["snapshots_taken"] >= 1
+    assert stats["journal"]["appended"] >= len(trace)
+
+    # supervised restart: cold engine <- snapshot, then journal replay
+    eng2 = _engine(tiny, **CONFIGS["paged"])
+    info = recover_engine(eng2, snapshot_dir=snap_dir, journal=journal)
+    assert info["restored"]["live"] + info["replayed"]["replayed"] > 0
+    done = _drain(eng2)
+    _assert_drained_clean(eng2)
+    journal.close()
+
+    # zero lost acknowledged requests: every journaled submit reaches a
+    # terminal state pre-crash or post-restart, token-exact either way
+    resolved = set()
+    for rid, (r, _) in out.items():
+        if r.status in ("done", "cancelled"):
+            resolved.add(rid)
+            if r.status == "done":            # finished before the wedge
+                np.testing.assert_array_equal(r.output, ref[rid].output)
+    for rid in range(len(trace)):
+        assert journal.seen(rid)
+        assert rid in resolved or rid in done, f"request {rid} lost"
+        if rid in done:
+            assert done[rid].status == "done"
+            np.testing.assert_array_equal(done[rid].output,
+                                          ref[rid].output)
+
+
+# ---------------------------------------------------------------------------
+# Cascade engine durability
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cascade_snapshot_restore_completes(tiny):
+    """Cascade snapshot/restore: pending and routed requests (and both
+    inner engines) survive the crash; the restored cascade drains every
+    request to "done". Replayed lost requests get fresh inner ids, so
+    the guarantee here is completion + leg-consistency, with exactness
+    carried by the inner engines' own restore tests."""
+    from repro.cascade.ecc_infer import CascadeLM, edge_variant
+    from repro.cascade.gate import make_thresholds
+    from repro.serving import CascadeServingEngine
+
+    cloud_cfg = _tiny_cfg()
+    edge_cfg = edge_variant(cloud_cfg, layers=1)
+    cloud, edge = LM(cloud_cfg, kv_chunk=8), LM(edge_cfg, kv_chunk=8)
+    cp, _ = cloud.init(jax.random.PRNGKey(0))
+    ep, _ = edge.init(jax.random.PRNGKey(1))
+
+    def build():
+        cascade = CascadeLM(edge, cloud,
+                            thresholds=make_thresholds(hi=0.01, lo=0.001))
+        return CascadeServingEngine(cascade, ep, cp, batch_slots=2,
+                                    max_seq_len=32)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 60, size=4 + i) for i in range(6)]
+
+    ref = build()
+    rids = [ref.submit(p, max_new_tokens=3) for p in prompts]
+    base = ref.run()
+
+    eng1 = build()
+    for p in prompts:
+        eng1.submit(p, max_new_tokens=3)
+    for _ in range(3):
+        eng1.step()
+    snap = eng1.snapshot()
+
+    eng2 = build()
+    info = eng2.restore(snap)
+    assert info["live"] + info["terminal"] == len(prompts)
+    assert eng2.restores == 1
+    done = eng2.run()
+    assert sorted(done) == sorted(rids)
+    for rid in rids:
+        r = done[rid]
+        assert r.status == "done"
+        assert r.route == base[rid].route
+        np.testing.assert_array_equal(r.output, base[rid].output)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: measured deadline outcomes feed the admission margin
+# ---------------------------------------------------------------------------
+
+def test_deadline_hit_feedback_widens_admission_margin():
+    from repro.core.monitoring import MonitoringService
+    from repro.serving.scheduler import Scheduler
+
+    sch = Scheduler(batch_slots=2, admission_policy="reject")
+    assert sch.deadline_safety_margin(1) == 1.0   # no evidence yet
+    mon = MonitoringService()
+    mon.record_serving("eng", {"deadline_hits": {
+        1: {"hits": 2, "total": 8, "rate": 0.25},
+        0: {"hits": 8, "total": 8, "rate": 1.0}}})
+    assert mon.feed_deadline_admission("eng", sch)
+    assert sch.deadline_safety_margin(0) == 1.0   # class 0 meets target
+    m = sch.deadline_safety_margin(1)             # class 1 misses badly
+    assert 1.0 < m <= sch.deadline_margin_cap
+    assert m == pytest.approx(sch.deadline_margin_target / 0.25)
+    # below min_obs: too little evidence to second-guess the EWMA
+    sch.absorb_deadline_hits({2: {"hits": 0, "total": 2}})
+    assert sch.deadline_safety_margin(2) == 1.0
+    # restart semantics: reset clears the margin with the estimates
+    sch.reset_estimates()
+    assert sch.deadline_safety_margin(1) == 1.0
+    # no snapshot recorded -> feed is a no-op
+    assert not mon.feed_deadline_admission("nope", sch)
