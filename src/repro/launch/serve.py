@@ -38,13 +38,31 @@ from repro.cascade.ecc_infer import CascadeLM, edge_variant
 from repro.cascade.gate import make_thresholds
 from repro.configs import get_config
 from repro.core.monitoring import MonitoringService
+from repro.launch.mesh import make_host_mesh
 from repro.models.model import LM
 from repro.serving import (CascadeServingEngine, EngineWedgedError,
                            FaultPlan, RequestJournal, ServingEngine,
-                           ServingGateway, recover_engine)
+                           ServingGateway, enable_compile_cache,
+                           recover_engine)
+
+
+def _mesh_from_args(args):
+    """--mesh N -> a (data, model) host mesh with an N-way model axis
+    (tensor-parallel decode: params and KV pools shard over KV heads)."""
+    ways = int(args.mesh or 1)
+    if ways <= 1:
+        return None
+    n = len(jax.devices())
+    if n % ways != 0:
+        raise SystemExit(
+            f"--mesh {ways} needs a device count divisible by {ways} "
+            f"(found {n}; on CPU export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={ways} before launch)")
+    return make_host_mesh(model=ways)
 
 
 def _build_engine(cfg, args, fault_plan=None):
+    mesh = _mesh_from_args(args)
     if args.cascade:
         edge_cfg = edge_variant(cfg, layers=1)
         cloud, edge = LM(cfg, kv_chunk=32), LM(edge_cfg, kv_chunk=32)
@@ -53,11 +71,12 @@ def _build_engine(cfg, args, fault_plan=None):
         cascade = CascadeLM(edge, cloud,
                             thresholds=make_thresholds(hi=0.01, lo=0.001))
         return CascadeServingEngine(cascade, ep, cp, batch_slots=4,
-                                    max_seq_len=96, fault_plan=fault_plan)
+                                    max_seq_len=96, fault_plan=fault_plan,
+                                    mesh=mesh)
     lm = LM(cfg, kv_chunk=32)
     params, _ = lm.init(jax.random.PRNGKey(0))
     return ServingEngine(lm, params, batch_slots=4, max_seq_len=96,
-                         fault_plan=fault_plan)
+                         fault_plan=fault_plan, mesh=mesh)
 
 
 async def _client(gw: ServingGateway, prompt, max_new: int,
@@ -101,6 +120,13 @@ async def _serve(args) -> None:
 
     journal = None
     gw_kw = {}
+    if args.compile_cache:
+        # persistent executable cache keyed under the state dir: a
+        # supervised restart-from-snapshot replays warm_compile from disk
+        state_dir = args.state_dir or tempfile.mkdtemp(prefix="repro_serve_")
+        args.state_dir = state_dir
+        enable_compile_cache(os.path.join(state_dir, "compile_cache"))
+        print(f"compile cache: {os.path.join(state_dir, 'compile_cache')}")
     if args.supervise:
         state_dir = args.state_dir or tempfile.mkdtemp(
             prefix="repro_serve_")
@@ -184,6 +210,15 @@ def main() -> None:
                          "EngineWedgedError, restart from snapshot")
     ap.add_argument("--state-dir", default=None,
                     help="journal/snapshot directory (default: tmpdir)")
+    # mesh-aware serving (ISSUE 10)
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="tensor-parallel ways on the 'model' mesh axis "
+                         "(device count must divide; on CPU export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N first). 1 = single-device (default)")
+    ap.add_argument("--compile-cache", action="store_true",
+                    help="persist compiled executables under --state-dir/"
+                         "compile_cache so restarts skip recompilation")
     ap.add_argument("--step-timeout", type=float, default=5.0,
                     help="watchdog wall-clock deadline per dispatch (s)")
     ap.add_argument("--hang-grace", type=float, default=1.0,

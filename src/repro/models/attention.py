@@ -419,6 +419,11 @@ def attn_decode(params, cfg, x, cache, cur_pos, *, window: Optional[int],
     start = positions_1d(cur_pos, b)
     positions = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
     q, k1, v1 = _qkv(params, cfg, x, positions)
+    # decode shards along heads (model axis) — the KV pool carries the same
+    # split on its kv-head dim, so append/attend stay shard-local per head
+    q = sh.hint(q, (sh.BATCH, None, sh.HEADS, None))
+    k1 = sh.hint(k1, (sh.BATCH, None, sh.KV, None))
+    v1 = sh.hint(v1, (sh.BATCH, None, sh.KV, None))
     cache = layout.append(cache, {"k": k1, "v": v1}, start, block_tables,
                           valid=valid)
     out = layout.attend(q, cache, positions, block_tables,

@@ -310,10 +310,22 @@ class LM:
     # -- full-sequence forward ---------------------------------------------
     def forward(self, params, batch, *, want_cache: bool = False,
                 cache_width: Optional[int] = None, train: bool = False,
-                last_only: bool = False, lengths=None):
+                last_only: bool = False, lengths=None,
+                mesh=None, rules=None):
         """Returns (logits, caches, aux_loss). ``last_only`` unembeds just
         the final position (serving prefill — §Perf B2); ``lengths`` is the
-        optional (B,) true-length vector for pad-free cache install."""
+        optional (B,) true-length vector for pad-free cache install.
+        ``mesh``/``rules`` activate logical-axis sharding hints for the
+        duration of this trace (mesh-aware serving); ``mesh=None`` leaves
+        the trace byte-identical to the hint-free path."""
+        with sh.maybe_rules(mesh, rules):
+            return self._forward(params, batch, want_cache=want_cache,
+                                 cache_width=cache_width, train=train,
+                                 last_only=last_only, lengths=lengths)
+
+    def _forward(self, params, batch, *, want_cache: bool = False,
+                 cache_width: Optional[int] = None, train: bool = False,
+                 last_only: bool = False, lengths=None):
         cfg = self.cfg
         x, positions = self._embed_inputs(params, batch)
         x = sh.hint(x, (sh.BATCH, sh.SEQ, None))
@@ -388,7 +400,8 @@ class LM:
         return None
 
     def decode_step(self, params, caches, tokens, cur_pos, *,
-                    layout=None, block_tables=None, valid=None):
+                    layout=None, block_tables=None, valid=None,
+                    mesh=None, rules=None):
         """One-token decode. tokens: (B, 1) (audio: (B, 1, C));
         ``cur_pos``: scalar or (B,) per-request positions (continuous
         batching decodes slots at different depths in one step).
@@ -405,11 +418,11 @@ class LM:
         dispatch per K tokens (multi-step decode)."""
         return self.prefill_chunk(params, caches, tokens, cur_pos,
                                   layout=layout, block_tables=block_tables,
-                                  valid=valid)
+                                  valid=valid, mesh=mesh, rules=rules)
 
     def prefill_chunk(self, params, caches, tokens, start_pos, *,
                       layout=None, block_tables=None, valid=None,
-                      logits_index=None):
+                      logits_index=None, mesh=None, rules=None):
         """Resume prefill with a T-token prompt chunk per slot (the chunked
         half of the serving scheduler; T = 1 is exactly ``decode_step``).
 
@@ -428,7 +441,17 @@ class LM:
 
         Chunks longer than one token require attention mixers (recurrent
         states fold tokens sequentially; their decode path is T = 1 only).
+        ``mesh``/``rules``: optional sharding context (see ``forward``).
         """
+        with sh.maybe_rules(mesh, rules):
+            return self._prefill_chunk(
+                params, caches, tokens, start_pos, layout=layout,
+                block_tables=block_tables, valid=valid,
+                logits_index=logits_index)
+
+    def _prefill_chunk(self, params, caches, tokens, start_pos, *,
+                       layout=None, block_tables=None, valid=None,
+                       logits_index=None):
         cfg = self.cfg
         t = tokens.shape[1]
         if t > 1:
@@ -470,14 +493,15 @@ class LM:
         return logits, new_caches
 
     def prefill(self, params, batch, cache_width: int,
-                last_only: bool = False, lengths=None):
+                last_only: bool = False, lengths=None,
+                mesh=None, rules=None):
         """Full forward that also returns populated caches. ``lengths``:
         optional (B,) true prompt lengths — right-pad rows then never land
         in a ring slot (load-bearing for windowed layers, whose cache is
         narrower than a padded bucket)."""
         logits, caches, aux, _ = self.forward(
             params, batch, want_cache=True, cache_width=cache_width,
-            last_only=last_only, lengths=lengths)
+            last_only=last_only, lengths=lengths, mesh=mesh, rules=rules)
         return logits, caches
 
     # -- losses ---------------------------------------------------------------

@@ -1,6 +1,6 @@
 from repro.serving.engine import (DrainBatchEngine, Request, ServingEngine,
-                                  load_snapshot, save_snapshot,
-                                  validate_prompt)
+                                  enable_compile_cache, load_snapshot,
+                                  save_snapshot, validate_prompt)
 from repro.serving.cascade_engine import (CascadeEngine, CascadeServingEngine,
                                           CircuitBreaker)
 from repro.serving.faults import FaultError, FaultPlan, SeamSpec
@@ -15,7 +15,10 @@ from repro.serving.sampler import (accepted_prefix_length, request_keys,
                                    sample_logits_keyed)
 from repro.serving.scheduler import (ChunkTask, PrefillProgress, Scheduler,
                                      StepPlan, bucket_for, chunk_buckets,
-                                     prompt_buckets, request_rank)
+                                     prompt_buckets, request_rank,
+                                     slots_for_hbm)
+from repro.serving.sharding import (assert_cache_placement, cache_shardings,
+                                    place_params, serving_rules)
 
 __all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
            "CascadeServingEngine", "CircuitBreaker",
@@ -29,4 +32,6 @@ __all__ = ["ServingEngine", "DrainBatchEngine", "Request", "CascadeEngine",
            "validate_prompt", "Scheduler", "StepPlan", "ChunkTask",
            "PrefillProgress", "request_rank",
            "KVCacheBackend", "RingCache", "PagedCache", "RingLayout",
-           "PagedLayout", "RING", "make_backend"]
+           "PagedLayout", "RING", "make_backend",
+           "enable_compile_cache", "slots_for_hbm", "serving_rules",
+           "place_params", "cache_shardings", "assert_cache_placement"]

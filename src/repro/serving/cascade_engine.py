@@ -155,7 +155,8 @@ class CascadeServingEngine:
                  breaker_failure_threshold: int = 3,
                  breaker_cooldown: int = 4,
                  admission_policy: Optional[str] = None,
-                 speculative_tokens: int = 0):
+                 speculative_tokens: int = 0,
+                 mesh=None, rules=None):
         from repro.serving.engine import ServingEngine
         self.cascade = cascade
         self.max_seq_len = max_seq_len
@@ -186,7 +187,11 @@ class CascadeServingEngine:
                          chunk_tokens=chunk_tokens, token_budget=token_budget,
                          prefix_sharing=prefix_sharing,
                          max_decode_steps=max_decode_steps,
-                         admission_policy=admission_policy)
+                         admission_policy=admission_policy,
+                         # mesh-aware serving: both legs ride the same mesh
+                         # (each engine places its own params/pool; leaves
+                         # whose dims don't divide simply replicate)
+                         mesh=mesh, rules=rules)
         self.edge_engine = ServingEngine(cascade.edge, edge_params,
                                          seed=seed, **engine_kw)
         # speculative cloud decode with the cascade's own edge model as the

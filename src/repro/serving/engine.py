@@ -110,6 +110,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 from typing import Dict, List, Optional
 
@@ -123,6 +124,8 @@ from repro.models.model import LM
 from repro.serving.faults import FaultError, FaultPlan
 from repro.serving.kv_cache import (RingCache, RingLayout, make_backend,
                                     resolve_swap_caches)
+from repro.serving.sharding import (assert_cache_placement, cache_shardings,
+                                    place_params, serving_rules)
 from repro.serving.sampler import (accepted_prefix_length, request_keys,
                                    sample_logits_batch, sample_logits_keyed)
 from repro.serving.scheduler import (MONOLITHIC, PrefillProgress, Scheduler,
@@ -222,6 +225,22 @@ def validate_prompt(prompt: np.ndarray, max_new_tokens: int,
     return prompt
 
 
+def enable_compile_cache(cache_dir: str) -> None:
+    """Arm JAX's persistent on-disk executable cache under ``cache_dir``.
+
+    ``warm_compile`` pre-runs every chunk bucket × scan horizon × backend
+    variant per process; with this cache keyed under the serving state dir
+    (``launch/serve.py --compile-cache``), a supervised
+    restart-from-snapshot replays the whole executable family from disk
+    instead of recompiling it — the restarted engine is hot in seconds.
+    Thresholds are dropped to zero so the small CPU-smoke executables are
+    cached too, not just the multi-second TPU compiles."""
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+
+
 class ServingEngine:
     """Continuous-batching autoregressive serving."""
 
@@ -243,11 +262,25 @@ class ServingEngine:
                  admission_policy: Optional[str] = None,
                  draft_model: Optional[LM] = None,
                  draft_params=None,
-                 speculative_tokens: int = 0):
+                 speculative_tokens: int = 0,
+                 mesh=None, rules=None):
         if lm.cfg.frontend.kind == "audio":
             raise NotImplementedError("engine serves text-token streams")
         self.lm = lm
         self.params = params
+        # mesh-aware serving: with a mesh, params commit to the decode-mode
+        # NamedShardings (attention/KV heads, MLP, vocab on 'model') and
+        # every model call below runs under the logical-axis rule context,
+        # so GSPMD partitions the jitted step family across the mesh. All
+        # scheduling and allocator state stays host-global. mesh=None takes
+        # every one of today's single-device code paths unchanged (the
+        # rules context is a literal no-op and no jit signature changes).
+        self.mesh = mesh
+        self.rules = None
+        if mesh is not None:
+            self.rules = dict(rules) if rules is not None \
+                else serving_rules(mesh)
+            self.params = place_params(mesh, lm, self.params)
         self.batch_slots = batch_slots
         self.max_seq_len = max_seq_len
         self.eos_id = eos_id
@@ -306,6 +339,9 @@ class ServingEngine:
         # scheduler plan, so the copy overlaps host planning work
         self.restores = 0
         self.hang_recoveries = 0
+        # wall time of the last warm_compile() (None until called): cold
+        # process vs snapshot-restart with the persistent compile cache
+        self.warm_compile_s: Optional[float] = None
         self._pending_swaps: List[object] = []
         self._status_counts = collections.Counter()  # terminal dispositions
         # per-step token tap (the gateway's streaming feed): when set, every
@@ -362,6 +398,13 @@ class ServingEngine:
             self.scheduler.chunked
             and getattr(self.backend, "prefix_sharing", False))
         self._cache_state = self.backend.init()
+        if mesh is not None:
+            # commit the KV pool to the mesh (K/V leaves split on the
+            # KV-head dim, tables/positions replicated) and tell the
+            # backend so its per-device byte accounting matches
+            self._cache_state = jax.device_put(
+                self._cache_state, cache_shardings(mesh, self._cache_state))
+            self.backend.note_placement(mesh)
         b, v = batch_slots, lm.cfg.padded_vocab
         self._state = {
             "last": jnp.zeros((b, v), jnp.float32),     # logits to sample next
@@ -423,6 +466,17 @@ class ServingEngine:
                 draft_model, draft_params, batch_slots=batch_slots,
                 max_seq_len=max_seq_len, proto_len=self.buckets[0])
             self._draft_state = self._draft_backend.init()
+            if mesh is not None:
+                # the draft rides the same mesh: its params/ring shard by
+                # the same decode rules (leaves whose dims don't divide
+                # simply replicate). Draft numerics only steer acceptance —
+                # key-coupled verification keeps outputs exact regardless.
+                self.draft_params = place_params(mesh, draft_model,
+                                                 self.draft_params)
+                self._draft_state = jax.device_put(
+                    self._draft_state,
+                    cache_shardings(mesh, self._draft_state))
+                self._draft_backend.note_placement(mesh)
             # slots whose draft cache missed tokens (generated by plain
             # decode rounds while speculation was collapsed): re-synced by
             # a draft prefill before the next speculative round reads them
@@ -538,7 +592,13 @@ class ServingEngine:
         — so nothing observable changes (masked appends land out of bounds
         or in the trash block, outputs and positions stay untouched, and
         the junk ``last`` logits are re-armed by any real admission). Call
-        while idle — before serving traffic — never mid-run."""
+        while idle — before serving traffic — never mid-run.
+
+        Wall time lands in ``warm_compile_s`` (and ``metrics()``): with the
+        persistent executable cache armed (``enable_compile_cache``) a
+        restarted process replays every compile from disk, so cold-vs-warm
+        wall time is the observable the compile cache is judged by."""
+        t0 = time.perf_counter()
         if self.scheduler.chunked:
             for bucket in self.scheduler.buckets:
                 ctxs = set()
@@ -595,6 +655,8 @@ class ServingEngine:
                  self._state) = self._spec_fn(
                     self.params, self.draft_params, self._cache_state,
                     self._draft_state, self._state, self._base_key, k)
+        jax.block_until_ready(self._state["active"])
+        self.warm_compile_s = time.perf_counter() - t0
 
     @property
     def pending(self) -> bool:
@@ -695,7 +757,8 @@ class ServingEngine:
         contiguous write (pad entries are overwritten before visibility)."""
         logits, one_caches = self.lm.prefill(
             params, {"tokens": tokens}, cache_width=self.max_seq_len,
-            lengths=jnp.reshape(length, (1,)) if self._windowed else None)
+            lengths=jnp.reshape(length, (1,)) if self._windowed else None,
+            mesh=self.mesh, rules=self.rules)
         last = jax.lax.dynamic_index_in_dim(logits[0], length - 1, axis=0,
                                             keepdims=False)
         cache_state = self.backend.prefill_fill(cache_state, one_caches,
@@ -723,7 +786,8 @@ class ServingEngine:
         logits, view = self.lm.prefill_chunk(
             params, view, tokens, jnp.reshape(start, (1,)),
             layout=self.backend.layout, block_tables=tables, valid=valid,
-            logits_index=jnp.reshape(length - 1, (1,)))
+            logits_index=jnp.reshape(length - 1, (1,)),
+            mesh=self.mesh, rules=self.rules)
         cache_state = self.backend.slot_update(cache_state, slot, view)
         last = logits[0, 0]
         state = dict(state)
@@ -756,7 +820,7 @@ class ServingEngine:
             params, cache_state["caches"], feed, state["pos"],
             layout=self.backend.layout,
             block_tables=cache_state["tables"],
-            valid=active[:, None])
+            valid=active[:, None], mesh=self.mesh, rules=self.rules)
         finished = steps >= state["budget"]
         if self.eos_id is not None:
             finished |= nxt == self.eos_id
@@ -806,7 +870,7 @@ class ServingEngine:
             draft_params, {"tokens": tokens}, cache_width=self.max_seq_len,
             last_only=True,
             lengths=jnp.reshape(length, (1,)) if self._draft_windowed
-            else None)
+            else None, mesh=self.mesh, rules=self.rules)
         return self._draft_backend.prefill_fill(draft_state, one_caches,
                                                 slot, length, None)
 
@@ -851,7 +915,7 @@ class ServingEngine:
             dlogits, dcaches = self.draft_lm.decode_step(
                 draft_params, dcaches, feed, pos + i,
                 layout=self._draft_backend.layout, block_tables=None,
-                valid=ok[:, None])
+                valid=ok[:, None], mesh=self.mesh, rules=self.rules)
             nxt = sample_logits_keyed(
                 request_keys(base_key, rid, steps + i + 1),
                 dlogits[:, 0, :].astype(jnp.float32), temp)
@@ -868,7 +932,7 @@ class ServingEngine:
         logits, caches = self.lm.prefill_chunk(
             params, cache_state["caches"], chunk, pos,
             layout=self.backend.layout, block_tables=cache_state["tables"],
-            valid=ok)
+            valid=ok, mesh=self.mesh, rules=self.rules)
         logits = logits.astype(jnp.float32)                 # (B, k+1, V)
 
         # s_i reads logits row i-1: the target's distribution after the
@@ -1333,6 +1397,8 @@ class ServingEngine:
             "speculative": self.speculative_metrics(),
             "restores": self.restores,
             "hang_recoveries": self.hang_recoveries,
+            "warm_compile_s": self.warm_compile_s,
+            "mesh_devices": self.mesh.size if self.mesh is not None else 1,
         }
 
     def speculative_metrics(self) -> Dict[str, object]:
@@ -1614,6 +1680,31 @@ class ServingEngine:
         if self.speculative:
             total += self._draft_backend.hbm_bytes()
         return total
+
+    def hbm_bytes_per_device(self) -> int:
+        """Per-device KV footprint: on a mesh the pools split their KV-head
+        dim ``kv_shards`` ways, so each device pays ``1/kv_shards`` of the
+        K/V bytes (position slots and tables replicate). Equals
+        ``hbm_bytes()`` without a mesh — and it's the quantity the
+        ``sharded_decode`` bench holds fixed while scaling slots."""
+        total = self.backend.hbm_bytes_per_device()
+        if self.speculative:
+            total += self._draft_backend.hbm_bytes_per_device()
+        return total
+
+    def assert_invariants(self) -> None:
+        """Engine-level invariant sweep (tests call this mid-traffic):
+        backend allocator accounting — extended to the live device pool,
+        so per-shard byte conservation is checked against the host-global
+        ledger — plus, on a mesh, placement coherence of the whole cache
+        state (every leaf carries exactly the prescribed sharding, one
+        equal-size shard per device)."""
+        if hasattr(self.backend, "assert_invariants"):
+            self.backend.assert_invariants(self._cache_state)
+        if self.mesh is not None:
+            assert_cache_placement(self.mesh, self._cache_state)
+            if self.speculative:
+                assert_cache_placement(self.mesh, self._draft_state)
 
     # -- durability -----------------------------------------------------------
     def note_hang(self) -> None:

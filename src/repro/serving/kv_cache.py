@@ -325,6 +325,41 @@ class KVCacheBackend:
     def hbm_bytes_per_slot(self) -> float:
         raise NotImplementedError
 
+    # -- mesh placement (tensor-parallel decode) -----------------------------
+    # K/V pools shard their KV-head dim over the mesh's 'model' axis; the
+    # block tables, free list and commitment ledger stay host-global. The
+    # backend only *accounts* for the split (kv_shards) — placement itself
+    # is jax.device_put with the shardings() tree, done by the engine.
+    kv_shards: int = 1
+
+    def shardings(self, mesh):
+        """NamedSharding tree matching ``init()``'s state pytree."""
+        from repro.serving.sharding import cache_shardings
+        return cache_shardings(mesh, jax.eval_shape(self.init))
+
+    def note_placement(self, mesh) -> None:
+        """Record the KV-head split for per-device accounting. Leaves whose
+        KV dim isn't divisible by the split stay replicated — the byte
+        walkers below apply the same per-leaf divisibility rule that
+        ``serving.sharding.cache_pspecs`` uses for placement."""
+        from repro.serving.sharding import model_axis_size
+        self.kv_shards = model_axis_size(mesh)
+
+    def hbm_bytes_per_device(self) -> int:
+        """Per-device KV footprint (== ``hbm_bytes`` without a mesh)."""
+        return self.hbm_bytes()
+
+
+def _kv_shard_divisor(path, shape, kv_shards: int) -> int:
+    """Ways a pool leaf's bytes split across devices: K/V leaves with a
+    divisible KV-head dim (dim 3 of 5) split ``kv_shards`` ways, everything
+    else is replicated. Mirrors ``serving.sharding.cache_pspecs``."""
+    name = path[-1].key if hasattr(path[-1], "key") else ""
+    if name in ("k", "v") and len(shape) == 5 \
+            and shape[3] % max(kv_shards, 1) == 0:
+        return max(kv_shards, 1)
+    return 1
+
 
 def _cache_proto(lm, params, max_seq_len: int, proto_len: int):
     """Abstract per-request cache structure, as ``prefill`` returns it."""
@@ -433,6 +468,16 @@ class RingCache(KVCacheBackend):
 
     def hbm_bytes_per_slot(self) -> float:
         return self.hbm_bytes() / self.batch_slots
+
+    def hbm_bytes_per_device(self) -> int:
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self._proto)[0]:
+            shape = (leaf.shape[0], self.batch_slots) + leaf.shape[2:]
+            n = math.prod(shape) // _kv_shard_divisor(
+                path, shape, self.kv_shards)
+            total += n * leaf.dtype.itemsize
+        return total
 
 
 class HostSwapHandle:
@@ -999,10 +1044,13 @@ class PagedCache(KVCacheBackend):
         tables[slot, :n_now] = fresh
         return {"caches": caches, "tables": jnp.asarray(tables)}
 
-    def assert_invariants(self) -> None:
+    def assert_invariants(self, cache_state=None) -> None:
         """Allocator accounting invariants (tests call this after runs and
         mid-traffic): block conservation across slots/tiers, ledger
-        consistency, and index/retention coherence."""
+        consistency, and index/retention coherence. With ``cache_state``
+        (the live device state) the sweep extends to sharded pools:
+        per-shard byte conservation must agree with the host-global
+        ledger's view of the pool."""
         held = [b for blocks in self._slot_blocks.values() for b in blocks]
         # every non-trash block is either held by exactly the slots that
         # refcount it, or parked in exactly one free tier
@@ -1036,6 +1084,39 @@ class PagedCache(KVCacheBackend):
             assert self._block_key.get(blk) == key
         for blk, key in self._block_key.items():
             assert self._index.get(key) == blk
+        if cache_state is not None:
+            self._assert_pool_placement(cache_state)
+
+    def _assert_pool_placement(self, cache_state) -> None:
+        """Sharded-pool accounting: the device pool must still be the
+        ledger's pool (width = ``num_blocks``), every K/V leaf must be
+        split exactly ``kv_shards`` ways on its KV-head dim (or replicated
+        when not divisible), each device must hold one equal-size shard,
+        and the summed per-device bytes must equal
+        ``hbm_bytes_per_device()`` — per-shard byte conservation agreeing
+        with the host-global ledger."""
+        per_dev_total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                cache_state["caches"])[0]:
+            if not hasattr(leaf, "sharding"):
+                continue
+            assert leaf.shape[1] == self.num_blocks, (
+                f"pool width {leaf.shape[1]} != ledger's {self.num_blocks}")
+            shard = leaf.sharding.shard_shape(leaf.shape)
+            shard_elems = math.prod(shard)
+            total_elems = math.prod(leaf.shape)
+            assert shard_elems and total_elems % shard_elems == 0
+            want = _kv_shard_divisor(path, leaf.shape, self.kv_shards)
+            assert total_elems // shard_elems == want, (
+                f"pool leaf {jax.tree_util.keystr(path)}: split "
+                f"{total_elems // shard_elems} ways, ledger expects {want}")
+            shard_bytes = shard_elems * leaf.dtype.itemsize
+            assert all(s.data.nbytes == shard_bytes
+                       for s in leaf.addressable_shards)
+            per_dev_total += shard_bytes
+        if per_dev_total:
+            assert per_dev_total == self.hbm_bytes_per_device(), (
+                per_dev_total, self.hbm_bytes_per_device())
 
     # -- chunked-prefill admission seam --------------------------------------
     def begin_slot(self, cache_state, slot, table_row, shared_blocks):
@@ -1133,8 +1214,23 @@ class PagedCache(KVCacheBackend):
             total += per_tok * self.block_size * leaf.dtype.itemsize
         return total
 
+    def block_bytes_per_device(self) -> int:
+        """Per-device bytes of one pool block: K/V leaves split their
+        KV-head dim ``kv_shards`` ways when divisible; the per-token
+        position leaf is replicated on every device."""
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self._proto)[0]:
+            per_tok = math.prod(leaf.shape[:1] + leaf.shape[3:])
+            per_tok //= _kv_shard_divisor(path, leaf.shape, self.kv_shards)
+            total += per_tok * self.block_size * leaf.dtype.itemsize
+        return total
+
     def hbm_bytes(self) -> int:
         return self.block_bytes() * self.num_blocks
+
+    def hbm_bytes_per_device(self) -> int:
+        return self.block_bytes_per_device() * self.num_blocks
 
     def hbm_bytes_per_slot(self) -> float:
         """Average bytes actually *drawn* per admitted request (the ring

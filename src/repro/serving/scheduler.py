@@ -155,6 +155,22 @@ def chunk_buckets(chunk_tokens: int, min_bucket: int = 8) -> List[int]:
     return prompt_buckets(chunk_tokens, min(min_bucket, chunk_tokens))
 
 
+def slots_for_hbm(hbm_bytes_per_device: int, slot_bytes: float,
+                  mesh_size: int = 1,
+                  cap: Optional[int] = None) -> int:
+    """Concurrent-slot budget from a *per-device* KV HBM budget.
+
+    A pool sharded over ``mesh_size`` devices on the KV-head axis holds
+    ``mesh_size ×`` the per-device budget in global K/V bytes, so at fixed
+    per-device HBM the slot count scales linearly with the mesh —
+    ``slot_bytes`` is the request's *global* footprint (e.g.
+    ``blocks_needed × PagedCache.block_bytes()``). This is the sizing
+    rule behind ``BENCH_serving.json``'s ``sharded_decode`` section."""
+    total = int(hbm_bytes_per_device) * max(int(mesh_size), 1)
+    slots = int(total // max(int(slot_bytes), 1))
+    return min(slots, cap) if cap is not None else slots
+
+
 class Scheduler:
     """Per-step admission + chunk policy under a token budget.
 

@@ -1,0 +1,112 @@
+"""Mesh placement for the serving stack (tensor-parallel decode).
+
+What shards, what stays host-global: params split per the decode-mode
+``launch/sharding_rules`` (attention/KV heads, MLP and vocab projections on
+the mesh's ``model`` axis); KV pools — ring lines ``(L, B, W, KV, hd)`` and
+paged pools ``(L, N, bs, KV, hd)`` — split on the KV-head dim (dim 3) when
+divisible. Everything the host mutates or reasons about stays replicated:
+block tables, position slots, MLA latent caches (no head dim), the free
+list and commitment ledger (plain Python on the host already).
+
+This module deliberately imports only ``jax``, ``repro.sharding`` and
+``repro.launch.sharding_rules`` so the serving package can pull it in from
+``kv_cache``/``engine`` without an import cycle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.launch import sharding_rules as sr
+
+
+def model_axis_size(mesh: Optional[Mesh]) -> int:
+    """Ways the 'model' mesh axis splits KV heads (1 without a mesh)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get("model", 1))
+
+
+def serving_rules(mesh: Mesh):
+    """Default activation rules for mesh-aware decode: the decode-mode
+    logical-axis rules the training dry-runs already validated."""
+    return sr.act_rules(mesh, "decode")
+
+
+def param_shardings(mesh: Mesh, lm):
+    """NamedSharding tree for ``lm``'s params under decode-mode rules."""
+    abstract, axes = lm.abstract()
+    return sr.named(mesh, sr.param_pspecs(mesh, abstract, axes,
+                                          mode="decode"))
+
+
+def place_params(mesh: Mesh, lm, params):
+    """Commit params to the mesh (KV/attention heads, MLP, vocab on
+    'model'; output-side embed dims replicated — decode rules)."""
+    return jax.device_put(params, param_shardings(mesh, lm))
+
+
+def _kv_pool_leaf(path, leaf) -> bool:
+    """True for the K/V pool leaves both backends store: ring lines
+    (L, B, W, KV, hd) and paged pools (L, N, bs, KV, hd). MLA latents
+    (``ckv``/``krope``, no head dim) and ``pos`` slots stay replicated."""
+    name = path[-1].key if hasattr(path[-1], "key") else ""
+    return name in ("k", "v") and getattr(leaf, "ndim", 0) == 5
+
+
+def cache_pspecs(mesh: Mesh, cache_state):
+    """PartitionSpec tree matching a serving cache state pytree: K/V pool
+    leaves split dim 3 (KV heads) on 'model' when divisible, everything
+    else — tables, pos, latents — replicated (host-global semantics)."""
+    msize = model_axis_size(mesh)
+
+    def spec(path, leaf):
+        dims = [None] * leaf.ndim
+        if _kv_pool_leaf(path, leaf) and leaf.shape[3] % msize == 0:
+            dims[3] = "model"
+        return PS(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_state)
+
+
+def cache_shardings(mesh: Mesh, cache_state):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_pspecs(mesh, cache_state),
+                        is_leaf=lambda x: isinstance(x, PS))
+
+
+def place_cache_state(mesh: Mesh, cache_state):
+    """Commit a backend's cache state to the mesh."""
+    return jax.device_put(cache_state, cache_shardings(mesh, cache_state))
+
+
+def assert_cache_placement(mesh: Mesh, cache_state) -> None:
+    """Placement-coherence sweep: every device-array leaf must carry
+    exactly the spec :func:`cache_pspecs` prescribes, split into
+    equal-size shards whose bytes conserve the global leaf (one shard
+    per device, shard_bytes x distinct_shards == leaf bytes)."""
+    expected = cache_shardings(mesh, cache_state)
+    ndev = mesh.size
+
+    def check(path, leaf, want):
+        if not hasattr(leaf, "sharding"):
+            return
+        assert leaf.sharding.is_equivalent_to(want, leaf.ndim), (
+            f"cache leaf {jax.tree_util.keystr(path)}: sharding "
+            f"{leaf.sharding} != expected {want}")
+        shard_elems = math.prod(leaf.sharding.shard_shape(leaf.shape))
+        total = math.prod(leaf.shape)
+        assert shard_elems and total % shard_elems == 0, (
+            f"cache leaf {jax.tree_util.keystr(path)}: shard shape "
+            f"does not tile the global shape")
+        per_dev = [s.data.nbytes for s in leaf.addressable_shards]
+        shard_bytes = shard_elems * leaf.dtype.itemsize
+        assert len(per_dev) == ndev and \
+            all(b == shard_bytes for b in per_dev), (
+                f"cache leaf {jax.tree_util.keystr(path)}: expected one "
+                f"{shard_bytes}-byte shard per device, got {per_dev}")
+
+    jax.tree_util.tree_map_with_path(check, cache_state, expected)

@@ -88,3 +88,18 @@ def hint(x, axes: Sequence[Optional[str]]):
     mesh, rules = ctx
     spec = resolve(rules, axes, shape=x.shape, mesh=mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@contextlib.contextmanager
+def maybe_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, object]]):
+    """:func:`use_rules` when a mesh is given, a literal no-op otherwise.
+
+    The serving/model entry points take ``mesh=None, rules=None`` and wrap
+    their bodies in this: with ``mesh=None`` every trace is byte-identical
+    to the pre-mesh code path (hints never fire, no new jit arguments), so
+    the single-device executable set is provably unchanged."""
+    if mesh is None:
+        yield
+        return
+    with use_rules(mesh, rules or {}):
+        yield
